@@ -1,0 +1,52 @@
+"""Shared benchmark plumbing: cluster builders, workload drivers, tables."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Cluster, WriteLog, percentiles
+from repro.core.network import paper_topology
+
+
+def paper_cluster(measure_compute: bool = True) -> Cluster:
+    """The §4 testbed: client, edge, edge2, cloud with tc-netem-equivalent
+    links (50ms/100Mb/s edge-cloud, 20ms/100Mb/s edge-edge)."""
+    return Cluster({"edge": "edge", "edge2": "edge", "cloud": "cloud"},
+                   net=paper_topology(), measure_compute=measure_compute)
+
+
+def open_workload(invoke: Callable[[float, int], object], rps: float,
+                  duration_s: float) -> List[object]:
+    """Paper's open workload: fixed arrival rate regardless of completions."""
+    results = []
+    n = int(rps * duration_s)
+    for i in range(n):
+        t_send = i * (1000.0 / rps)
+        results.append(invoke(t_send, i))
+    return results
+
+
+def latency_stats(results, name: str = "") -> Dict[str, float]:
+    lat = [r.response_ms for r in results]
+    p = percentiles(lat, (50, 90, 99))
+    return {"name": name, "n": len(lat), "mean": float(np.mean(lat)),
+            "p50": p[50], "p90": p[90], "p99": p[99]}
+
+
+def print_table(rows: List[Dict], title: str) -> None:
+    if not rows:
+        return
+    cols = list(rows[0].keys())
+    print(f"\n## {title}")
+    print("| " + " | ".join(cols) + " |")
+    print("|" + "|".join(["---"] * len(cols)) + "|")
+    for r in rows:
+        cells = []
+        for c in cols:
+            v = r[c]
+            cells.append(f"{v:.2f}" if isinstance(v, float) else str(v))
+    # markdown row
+        print("| " + " | ".join(cells) + " |")

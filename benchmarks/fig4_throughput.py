@@ -1,0 +1,107 @@
+"""Fig 4 reproduction: read/write throughput vs data item size, store at
+edge vs cloud.
+
+The paper drives a closed workload (100 client threads, 2 min) against a
+read function and a write function with item sizes 1 B … 1 MB.  Here the
+per-op local store cost is MEASURED (real jitted arena ops on this host);
+the closed-loop throughput then follows Little's law with the network model:
+
+    latency(size)   = client_rtt + per-op network (placement) + compute
+    tasks/s         = threads / latency,     capped by link bandwidth
+    MB/s            = tasks/s × size
+
+Expected shapes (paper §4.2): cloud reads saturate the 12.5 MB/s (100 Mb/s)
+edge-cloud link for items ≳100 kB; edge reads keep scaling; writes show the
+same ordering with a lower ceiling.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.network import paper_topology
+from repro.core.store import kv_get, kv_set, store_new
+from repro.core.versioning import MAX_NODES, fnv1a
+
+SIZES = [1, 100, 1_000, 10_000, 100_000, 1_000_000]
+THREADS = 100
+
+
+def _measure_local_op_ms(size: int, op: str) -> float:
+    """Median wall time of a jitted arena get/set at this payload size."""
+    width = max(1, size)
+    store = store_new(4, width, MAX_NODES, dtype=jnp.uint8)
+    h = fnv1a("k")
+    row = jnp.zeros((width,), jnp.uint8)
+    clock = jnp.zeros((), jnp.int32)
+
+    if op == "set":
+        fn = jax.jit(lambda s, c: kv_set(s, h, row, width, c, 0))
+        out = fn(store, clock)
+        jax.block_until_ready(out[0])
+        ts = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            out = fn(store, clock)
+            jax.block_until_ready(out[0])
+            ts.append((time.perf_counter() - t0) * 1e3)
+        return float(np.median(ts))
+    store, clock, _ = kv_set(store, h, row, width, clock, 0)
+    fn = jax.jit(lambda s: kv_get(s, h))
+    out = fn(store)
+    jax.block_until_ready(out[0])
+    ts = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        out = fn(store)
+        jax.block_until_ready(out[0])
+        ts.append((time.perf_counter() - t0) * 1e3)
+    return float(np.median(ts))
+
+
+def run():
+    net = paper_topology()
+    rows = []
+    for op in ("read", "write"):
+        for size in SIZES:
+            local_ms = _measure_local_op_ms(size, "get" if op == "read"
+                                            else "set")
+            for placement in ("edge", "cloud"):
+                lan = net.link("client", "edge")
+                # client->edge function invocation (tiny request payload)
+                lat = lan.rtt_ms + lan.transfer_ms(64)
+                if placement == "cloud":
+                    link = net.link("edge", "cloud")
+                    lat += link.rtt_ms + link.transfer_ms(size)
+                    cap_mbs = link.bandwidth_mbps / 8.0
+                else:
+                    cap_mbs = float("inf")
+                lat += local_ms
+                tps = THREADS / (lat / 1e3)
+                mbs = tps * size / 1e6
+                if mbs > cap_mbs:          # link saturation (fig 4a ceiling)
+                    mbs = cap_mbs
+                    tps = mbs * 1e6 / size
+                rows.append({"op": op, "size_B": size, "store": placement,
+                             "latency_ms": round(lat, 2),
+                             "tasks_per_s": round(tps, 1),
+                             "MB_per_s": round(mbs, 2)})
+    return rows
+
+
+def main():
+    from benchmarks.common import print_table
+    rows = run()
+    print_table(rows, "Fig 4 — read/write throughput vs item size")
+    ceiling = [r for r in rows if r["op"] == "read" and r["store"] == "cloud"
+               and r["size_B"] >= 100_000]
+    print(f"\ncloud read ceiling at >=100kB: "
+          f"{[r['MB_per_s'] for r in ceiling]} MB/s (paper: 12.5 MB/s)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Render the §Roofline table from dry-run artifacts (artifacts/dryrun)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+ART_DIR = os.environ.get("DRYRUN_ARTIFACTS",
+                         os.path.join(os.path.dirname(__file__), "..",
+                                      "artifacts", "dryrun"))
+
+
+def load_records(mesh: str = "16x16", art_dir: Optional[str] = None
+                 ) -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(art_dir or ART_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("mesh") == mesh:
+            recs.append(r)
+    return recs
+
+
+def _fmt_row(r: Dict) -> Optional[Dict]:
+    if r.get("skipped"):
+        return {"arch": r["arch"], "shape": r["shape"], "compute_s": "—",
+                "memory_s": "—", "collective_s": "—", "dominant": "skip",
+                "GiB/dev": "—", "useful%": "—", "roofline%": "—",
+                "note": r.get("skip_reason", "")[:40]}
+    if not r.get("ok"):
+        return {"arch": r["arch"], "shape": r["shape"], "compute_s": "—",
+                "memory_s": "—", "collective_s": "—", "dominant": "FAIL",
+                "GiB/dev": "—", "useful%": "—", "roofline%": "—",
+                "note": r.get("error", "")[:40]}
+    t = r["roofline"]
+    return {
+        "arch": r["arch"], "shape": r["shape"],
+        "compute_s": f"{t['compute_s']:.3e}",
+        "memory_s": f"{t['memory_s']:.3e}",
+        "collective_s": f"{t['collective_s']:.3e}",
+        "dominant": t["dominant"].replace("_s", ""),
+        "GiB/dev": f"{r['memory']['per_device_total']/2**30:.1f}",
+        "useful%": f"{100*t['useful_flops_ratio']:.1f}",
+        "roofline%": f"{100*t['roofline_fraction']:.2f}",
+        "note": "",
+    }
+
+
+def table(mesh: str = "16x16", art_dir: Optional[str] = None) -> str:
+    rows = [_fmt_row(r) for r in load_records(mesh, art_dir)]
+    rows = [r for r in rows if r]
+    if not rows:
+        return f"(no artifacts for mesh {mesh} — run repro.launch.dryrun)"
+    cols = list(rows[0].keys())
+    out = ["| " + " | ".join(cols) + " |",
+           "|" + "|".join(["---"] * len(cols)) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(r[c]) for c in cols) + " |")
+    return "\n".join(out)
+
+
+def main():
+    print("\n## Roofline baseline — single-pod 16×16 (terms in s/step, "
+          "per-chip)")
+    print(table("16x16"))
+    recs = [r for r in load_records("16x16") if r.get("ok")]
+    if recs:
+        worst = min(recs, key=lambda r: r["roofline"]["roofline_fraction"])
+        coll = max(recs,
+                   key=lambda r: r["roofline"]["collective_s"]
+                   / max(r["roofline"]["bound_step_s"], 1e-30))
+        print(f"\nworst roofline fraction: {worst['arch']}×{worst['shape']} "
+              f"({100*worst['roofline']['roofline_fraction']:.2f}%)")
+        print(f"most collective-heavy: {coll['arch']}×{coll['shape']}")
+    return recs
+
+
+if __name__ == "__main__":
+    main()

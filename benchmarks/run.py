@@ -1,0 +1,80 @@
+"""Benchmark harness: one reproduction per paper figure + the roofline
+table.  ``python -m benchmarks.run [--fast]``
+
+fig3  moving-average latency, store edge vs cloud        (paper Fig 3)
+fig4  read/write throughput vs item size                 (paper Fig 4)
+fig6  three placements: latency + staleness              (paper Fig 5/6)
+fig8  smart-city multi-function app                      (paper Fig 7/8)
+roofline  per (arch × shape) terms from the dry-run      (§Roofline)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig3,fig4,fig6,fig8,roofline")
+    ap.add_argument("--fast", action="store_true",
+                    help="shorter workloads (CI)")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    which = set((args.only or "fig3,fig4,fig6,fig8,roofline").split(","))
+    results = {}
+    t0 = time.time()
+
+    if "fig3" in which:
+        from benchmarks import fig3_moving_average
+        dur = 5.0 if args.fast else 30.0
+        reps = 1 if args.fast else 3
+        rows = fig3_moving_average.run(duration_s=dur, repeats=reps)
+        from benchmarks.common import print_table
+        print_table(rows, "Fig 3 — moving average latency (ms)")
+        edge = [r["p50"] for r in rows if "edge" in r["placement"]]
+        cloud = [r["p50"] for r in rows if "cloud" in r["placement"]]
+        delta = sum(cloud) / len(cloud) - sum(edge) / len(edge)
+        print(f"median delta cloud-edge: {delta:.1f} ms (paper: ≈200 ms)")
+        results["fig3"] = {"rows": rows, "delta_ms": delta}
+
+    if "fig4" in which:
+        from benchmarks import fig4_throughput
+        rows = fig4_throughput.main()
+        results["fig4"] = {"rows": rows}
+
+    if "fig6" in which:
+        from benchmarks import fig6_replication
+        dur = 5.0 if args.fast else 20.0
+        reps = 1 if args.fast else 3
+        rows = fig6_replication.run(duration_s=dur, repeats=reps)
+        from benchmarks.common import print_table
+        print_table(rows, "Fig 6 — placement vs latency + staleness")
+        results["fig6"] = {"rows": rows}
+
+    if "fig8" in which:
+        from benchmarks import fig8_smart_city
+        dur = 10.0 if args.fast else 60.0
+        reps = 1 if args.fast else 3
+        rows = fig8_smart_city.run(duration_s=dur, repeats=reps)
+        from benchmarks.common import print_table
+        print_table(rows, "Fig 8 — smart-city latency (ms)")
+        results["fig8"] = {"rows": rows}
+
+    if "roofline" in which:
+        from benchmarks import roofline_table
+        roofline_table.main()
+        results["roofline"] = "see artifacts/dryrun"
+
+    print(f"\nbenchmarks done in {time.time()-t0:.1f}s")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+    return results
+
+
+if __name__ == "__main__":
+    main()

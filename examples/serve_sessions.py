@@ -1,0 +1,72 @@
+"""Serving driver: decode sessions as replicated Enoki keygroups.
+
+Two logical pods serve separate session batches; every R tokens the session
+keygroups anti-entropy to the peer pod (ring backup).  Pod 0 then "fails";
+its sessions resume on pod 1 from the backup with ≤R tokens of staleness —
+the serving analogue of the paper's §4.3 measurement.
+
+    PYTHONPATH=src python examples/serve_sessions.py
+"""
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES_BY_NAME, get_arch, reduced
+from repro.models import model_zoo as zoo
+
+
+def main():
+    arch = reduced(get_arch("internlm2-1.8b"))
+    n_pods, batch, max_len, R = 2, 2, 64, 4
+    params = zoo.init_params(arch, jax.random.PRNGKey(0), dtype=jnp.bfloat16)
+    sparams = jax.tree.map(lambda l: jnp.stack([l] * n_pods), params)
+
+    step = jax.jit(jax.vmap(
+        lambda p, c, t: zoo.decode_step(arch, p, c, t)))
+    live = jax.tree.map(lambda l: jnp.stack([l] * n_pods),
+                        zoo.init_cache(arch, batch, max_len))
+    backup = live
+    replicate = jax.jit(lambda c: jax.tree.map(
+        lambda x: jnp.roll(x, 1, axis=0), c))
+
+    token = jnp.ones((n_pods, batch, 1), jnp.int32)
+    print(f"decoding on {n_pods} pods × {batch} sessions, backup every "
+          f"{R} tokens")
+    generated = [[] for _ in range(n_pods)]
+    for t in range(10):
+        logits, live = step(sparams, live, token)
+        token = jnp.argmax(logits[..., -1, :], axis=-1)[..., None] \
+            .astype(jnp.int32)
+        for p in range(n_pods):
+            generated[p].append(int(token[p, 0, 0]))
+        if (t + 1) % R == 0:
+            backup = replicate(live)
+            print(f"  t={t+1}: anti-entropy -> peer backup "
+                  f"(session length {int(live['length'][0])})")
+
+    print(f"generated (pod0 session0): {generated[0]}")
+    # ---- pod 0 dies; its sessions live on in pod 1's backup slot ----------
+    lost_len = int(live["length"][0])
+    dead = jnp.asarray([True, False])
+    migrate = jax.jit(lambda l, b: jax.tree.map(
+        lambda x, y: jnp.where(dead.reshape((n_pods,) + (1,) * (x.ndim - 1)),
+                               y, x), l, b))
+    restored = migrate(live, backup)
+    staleness = lost_len - int(restored["length"][0])
+    print(f"pod0 failed at token {lost_len}; restored session is at token "
+          f"{int(restored['length'][0])} -> staleness = {staleness} tokens "
+          f"(bound: R={R})")
+    assert staleness <= R
+    # continue decoding the restored sessions
+    logits, restored = step(sparams, restored, token)
+    print("restored sessions decode onward: OK")
+
+
+if __name__ == "__main__":
+    main()

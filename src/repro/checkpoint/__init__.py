@@ -1,0 +1,4 @@
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.serializer import deserialize_tree, serialize_tree
+
+__all__ = ["CheckpointManager", "deserialize_tree", "serialize_tree"]

@@ -1,0 +1,76 @@
+"""Pytree <-> bytes: msgpack framing + zstd compression + content hash.
+
+Layout: a msgpack map {path: {dtype, shape, data}} with an integrity footer.
+bfloat16 has no numpy wire type, so it travels as uint16 bit patterns with
+dtype tag 'bfloat16'.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+        else:
+            parts.append(str(e))
+    return "/".join(parts)
+
+
+def _encode_leaf(x) -> Dict[str, Any]:
+    arr = np.asarray(jax.device_get(x))
+    if arr.dtype == jnp.bfloat16:
+        return {"dtype": "bfloat16", "shape": list(arr.shape),
+                "data": arr.view(np.uint16).tobytes()}
+    return {"dtype": arr.dtype.str, "shape": list(arr.shape),
+            "data": arr.tobytes()}
+
+
+def _decode_leaf(rec: Dict[str, Any]) -> np.ndarray:
+    shape = tuple(rec["shape"])
+    if rec["dtype"] == "bfloat16":
+        return np.frombuffer(rec["data"], np.uint16).reshape(shape).view(
+            jnp.bfloat16)
+    return np.frombuffer(rec["data"], np.dtype(rec["dtype"])).reshape(shape)
+
+
+def serialize_tree(tree: Any, level: int = 3) -> bytes:
+    flat = {}
+    jax.tree_util.tree_map_with_path(
+        lambda path, leaf: flat.setdefault(_path_str(path),
+                                           _encode_leaf(leaf)), tree)
+    raw = msgpack.packb(flat, use_bin_type=True)
+    digest = hashlib.sha256(raw).hexdigest().encode()
+    framed = msgpack.packb({"payload": raw, "sha256": digest},
+                           use_bin_type=True)
+    return zstandard.ZstdCompressor(level=level).compress(framed)
+
+
+def deserialize_tree(blob: bytes, template: Any) -> Any:
+    framed = msgpack.unpackb(zstandard.ZstdDecompressor().decompress(blob),
+                             raw=False)
+    raw = framed["payload"]
+    if hashlib.sha256(raw).hexdigest().encode() != framed["sha256"]:
+        raise IOError("checkpoint integrity check failed (sha256 mismatch)")
+    flat = msgpack.unpackb(raw, raw=False)
+
+    def restore(path, leaf):
+        rec = flat[_path_str(path)]
+        arr = _decode_leaf(rec)
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch at {_path_str(path)}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        return arr
+
+    return jax.tree_util.tree_map_with_path(restore, template)

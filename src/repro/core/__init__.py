@@ -1,0 +1,38 @@
+"""Enoki core: the paper's contribution as a composable JAX module.
+
+Layers (DESIGN.md §3):
+  versioning/crdt/store   — versioned KV arena + convergent merges
+  keygroup/naming         — replication units + control plane
+  replication             — anti-entropy (logical nodes & pod mesh axis)
+  consistency             — client-centric session guarantees
+  faas/cluster/router     — the FaaS programming model + testbed + routing
+  network/staleness       — the paper's network emulation + metrics
+"""
+from repro.core.cluster import Cluster, InvokeResult
+from repro.core.consistency import Session
+from repro.core.crdt import (GCounter, LWWRegister, PNCounter, gcounter_merge,
+                             lww_merge, pncounter_merge, vv_merge)
+from repro.core.faas import (KV, FunctionSpec, VectorCodec, enoki_function,
+                             get_function, registry)
+from repro.core.keygroup import KeygroupSpec, TensorKeygroup
+from repro.core.naming import NamingService
+from repro.core.network import NetworkModel, paper_topology
+from repro.core.replication import (anti_entropy_round, converge,
+                                    make_pod_replicate_step,
+                                    replicate_pod_axis)
+from repro.core.router import Router
+from repro.core.staleness import WriteLog, percentiles
+from repro.core.store import (Store, kv_delete, kv_get, kv_scan, kv_set,
+                              merge_stores, store_new)
+from repro.core.versioning import fnv1a
+
+__all__ = [
+    "Cluster", "InvokeResult", "Session", "GCounter", "LWWRegister",
+    "PNCounter", "gcounter_merge", "lww_merge", "pncounter_merge", "vv_merge",
+    "KV", "FunctionSpec", "VectorCodec", "enoki_function", "get_function",
+    "registry", "KeygroupSpec", "TensorKeygroup", "NamingService",
+    "NetworkModel", "paper_topology", "anti_entropy_round", "converge",
+    "make_pod_replicate_step", "replicate_pod_axis", "Router", "WriteLog",
+    "percentiles", "Store", "kv_delete", "kv_get", "kv_scan", "kv_set",
+    "merge_stores", "store_new", "fnv1a",
+]

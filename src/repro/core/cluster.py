@@ -1,0 +1,300 @@
+"""Discrete-event Enoki cluster (the §4/§5 testbed).
+
+Runs REAL jitted function handlers against REAL store arenas on this machine,
+and layers the paper's emulated network (network.py) on top as virtual time —
+the same methodology as the paper's tc-netem testbed, with the network
+emulated analytically instead of in the kernel.
+
+Replication is asynchronous, exactly as in FReD: a local write to a
+REPLICATED keygroup schedules a delivery event at every peer replica at
+``t_apply + one_way_delay``; peers fold the update in (LWW/CRDT merge) before
+serving any access with a later timestamp.  Staleness falls out of the event
+timeline and is measured by the benchmarks the same way the paper measures it
+(read time minus the apply time of the overwriting operation).
+
+Placements (ReplicationPolicy):
+  REPLICATED     kv ops hit the node-local replica; async replication to peers
+  PEER_FETCH     kv ops hit the owner node's store; remote nodes pay one RTT/op
+  CLOUD_CENTRAL  kv ops hit the cloud node's store; everyone else pays RTT/op
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ReplicationPolicy
+from repro.core.faas import FunctionSpec, VectorCodec, compile_handler
+from repro.core.keygroup import KeygroupSpec, arena_new
+from repro.core.naming import NamingService
+from repro.core.network import NetworkModel, paper_topology
+from repro.core.store import Store, merge_stores
+from repro.core.versioning import MAX_NODES
+
+
+@dataclasses.dataclass
+class InvokeResult:
+    output: Any
+    response_ms: float          # client-observed request-response latency
+    t_sent: float
+    t_received: float
+    t_applied: float            # when state mutation took effect at the store
+    kv_ops: List[Tuple[str, int]]
+    node: str
+    chain: List[str] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class _Node:
+    name: str
+    kind: str                   # "edge" | "cloud"
+    node_id: int
+    stores: Dict[str, Store] = dataclasses.field(default_factory=dict)
+    clock: jnp.ndarray = None
+    handlers: Dict[str, Callable] = dataclasses.field(default_factory=dict)
+    compute_ms: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.clock is None:
+            self.clock = jnp.zeros((), jnp.int32)
+
+
+class Cluster:
+    def __init__(self, nodes: Dict[str, str], net: Optional[NetworkModel] = None,
+                 measure_compute: bool = True):
+        self.net = net or paper_topology()
+        self.naming = NamingService()
+        self.nodes: Dict[str, _Node] = {}
+        for i, (name, kind) in enumerate(nodes.items()):
+            self.nodes[name] = _Node(name=name, kind=kind, node_id=i)
+            self.naming.register_node(name, kind)
+        # pending replication deliveries: (arrival_t, seq, kg, target, snapshot)
+        self._events: List[Tuple[float, int, str, str, Store]] = []
+        self._seq = itertools.count()
+        self._measure = measure_compute
+        self.replication_bytes = 0   # accounting for §Perf
+        self.specs: Dict[str, FunctionSpec] = {}
+        self.policies: Dict[str, KeygroupSpec] = {}
+
+    # ------------------------------------------------------------------ deploy
+    def create_keygroup(self, spec: KeygroupSpec, nodes: List[str]) -> None:
+        self.naming.create_keygroup(spec)
+        self.policies[spec.name] = spec
+        for n in nodes:
+            self._materialise_keygroup(spec, n)
+
+    def _materialise_keygroup(self, spec: KeygroupSpec, node: str) -> None:
+        """Create or replicate a keygroup to ``node`` (§2: deploy-time copy)."""
+        existing = self.naming.replicas_of(spec.name)
+        nd = self.nodes[node]
+        if node in existing:
+            return
+        if existing:
+            # replicate current contents from any live replica
+            src = next(iter(existing))
+            nd.stores[spec.name] = self.nodes[src].stores[spec.name]
+        else:
+            nd.stores[spec.name] = arena_new(
+                dataclasses.replace(spec, value_width=spec.value_width),
+                MAX_NODES)
+        self.naming.add_replica(spec.name, node)
+
+    def deploy(self, spec: FunctionSpec, nodes: List[str],
+               policy: ReplicationPolicy = ReplicationPolicy.REPLICATED,
+               owner: Optional[str] = None, value_width: Optional[int] = None,
+               example_input=None) -> None:
+        """Deploy a function (and its keygroups) to ``nodes`` — §2 flow."""
+        self.specs[spec.name] = spec
+        self.naming.register_function(spec.name, spec.keygroups)
+        example = example_input if example_input is not None else jnp.zeros((1,), jnp.float32)
+        for kg_name in spec.keygroups:
+            kspec = self.policies.get(kg_name) or KeygroupSpec(
+                name=kg_name, policy=policy,
+                value_width=value_width or spec.codec_width, owner=owner)
+            self.policies[kg_name] = kspec
+            self.naming.create_keygroup(kspec)
+            # store placement depends on policy
+            if kspec.policy == ReplicationPolicy.REPLICATED:
+                placement = nodes
+            elif kspec.policy == ReplicationPolicy.PEER_FETCH:
+                placement = [kspec.owner or nodes[0]]
+            else:  # CLOUD_CENTRAL
+                placement = [kspec.owner or self._cloud_node()]
+            for n in placement:
+                self._materialise_keygroup(kspec, n)
+        for n in nodes:
+            nd = self.nodes[n]
+            nd.handlers[spec.name] = compile_handler(spec, nd.node_id, example)
+            self.naming.add_deployment(spec.name, n)
+            if self._measure:
+                nd.compute_ms[spec.name] = self._measure_compute(spec, nd, example)
+            else:
+                nd.compute_ms[spec.name] = 0.0
+
+    def _cloud_node(self) -> str:
+        for n, nd in self.nodes.items():
+            if nd.kind == "cloud":
+                return n
+        return next(iter(self.nodes))
+
+    def _measure_compute(self, spec: FunctionSpec, nd: _Node, example) -> float:
+        """Median wall-time of the jitted handler on this host (warm starts)."""
+        kg = spec.keygroups[0] if spec.keygroups else None
+        if kg and kg in nd.stores:
+            store = nd.stores[kg]
+        elif kg:
+            # store placed remotely (PEER_FETCH/CLOUD_CENTRAL): measure against
+            # any replica's state — compute cost is placement-independent.
+            replica = next(iter(self.naming.replicas_of(kg)))
+            store = self.nodes[replica].stores[kg]
+        else:
+            store = arena_new(
+                KeygroupSpec(name="_tmp", value_width=spec.codec_width),
+                MAX_NODES)
+        h = nd.handlers[spec.name]
+        h(store, nd.clock, example)  # compile
+        ts = []
+        for _ in range(10):
+            t0 = time.perf_counter()
+            out = h(store, nd.clock, example)
+            jax.block_until_ready(out[:3])
+            ts.append((time.perf_counter() - t0) * 1e3)
+        return float(np.median(ts))
+
+    # --------------------------------------------------------------- timeline
+    def _deliver_until(self, node: str, t: float) -> None:
+        """Apply all replication deliveries for ``node`` with arrival <= t."""
+        keep = []
+        for ev in self._events:
+            arrival, _, kg, target, snapshot = ev
+            if target == node and arrival <= t:
+                nd = self.nodes[node]
+                nd.stores[kg] = merge_stores(nd.stores[kg], snapshot)
+            else:
+                keep.append(ev)
+        self._events = keep
+
+    def _schedule_replication(self, kg: str, source: str, t_apply: float) -> None:
+        spec = self.policies[kg]
+        if spec.policy != ReplicationPolicy.REPLICATED:
+            return
+        snapshot = self.nodes[source].stores[kg]
+        nbytes = sum(int(np.prod(x.shape)) * x.dtype.itemsize
+                     for x in snapshot[:4])
+        for peer in self.naming.replicas_of(kg):
+            if peer == source:
+                continue
+            arrival = t_apply + self.net.one_way_ms(source, peer)
+            heapq.heappush(self._events,
+                           (arrival, next(self._seq), kg, peer, snapshot))
+            self.replication_bytes += nbytes
+
+    # ----------------------------------------------------------------- invoke
+    def invoke(self, fn_name: str, node: str, x, t_send: float = 0.0,
+               client: str = "client", payload_bytes: int = 64,
+               _depth: int = 0) -> InvokeResult:
+        spec = self.specs[fn_name]
+        nd = self.nodes[node]
+        handler = nd.handlers[fn_name]
+        t_arrive = t_send + (self.net.one_way_ms(client, node)
+                             + self.net.link(client, node).transfer_ms(payload_bytes))
+
+        # which store does this function's state live in? (placement)
+        kg = spec.keygroups[0] if spec.keygroups else None
+        if kg is None:
+            store_node, per_op_ms = node, 0.0
+        else:
+            kspec = self.policies[kg]
+            if kspec.policy == ReplicationPolicy.REPLICATED:
+                store_node, per_op_ms = node, 0.0
+            else:
+                owner = (kspec.owner or
+                         (self._cloud_node()
+                          if kspec.policy == ReplicationPolicy.CLOUD_CENTRAL
+                          else node))
+                store_node = owner
+                per_op_ms = 0.0 if owner == node else self.net.rtt_ms(node, owner)
+
+        # fold in any replication that arrived before we touch the store
+        if kg is not None:
+            self._deliver_until(store_node, t_arrive)
+
+        # execute the real handler against the placed store
+        if kg is not None:
+            snd = self.nodes[store_node]
+            store = snd.stores[kg]
+            new_store, new_clock, y, ops = handler(store, snd.clock, x)
+            snd.stores[kg] = new_store
+            snd.clock = new_clock
+        else:
+            _, _, y, ops = handler(
+                arena_new(KeygroupSpec(name="_tmp",
+                                       value_width=spec.codec_width), MAX_NODES),
+                nd.clock, x)
+
+        compute = nd.compute_ms.get(fn_name, 0.0)
+        # per-op network charges for remote store placements (§4.1: the +200ms)
+        op_net = 0.0
+        for kind, nbytes in ops:
+            if per_op_ms > 0.0:
+                link = self.net.link(node, store_node)
+                op_net += per_op_ms + link.transfer_ms(nbytes)
+        t_applied = t_arrive + compute + op_net
+        chain = [fn_name]
+
+        # async replication of the (possibly) mutated keygroup
+        wrote = any(k in ("set", "delete") for k, _ in ops)
+        if kg is not None and wrote:
+            self._schedule_replication(kg, store_node, t_applied)
+
+        # synchronous downstream calls (fig 8 call chains)
+        t_down = t_applied
+        downstream = spec.calls and self._route_downstream(spec, y)
+        if downstream:
+            for callee, is_async in downstream:
+                target = self._nearest_deployment(callee, node)
+                sub = self.invoke(callee, target, y, t_send=t_down, client=node,
+                                  payload_bytes=payload_bytes, _depth=_depth + 1)
+                chain.extend(sub.chain)
+                if not is_async:
+                    t_down = sub.t_received
+        t_done = max(t_applied, t_down)
+
+        t_received = t_done + (self.net.one_way_ms(client, node)
+                               + self.net.link(client, node).transfer_ms(payload_bytes))
+        return InvokeResult(output=y, response_ms=t_received - t_send,
+                            t_sent=t_send, t_received=t_received,
+                            t_applied=t_applied, kv_ops=ops, node=node,
+                            chain=chain)
+
+    def _route_downstream(self, spec: FunctionSpec, y) -> List[Tuple[str, bool]]:
+        """Which downstream calls fire, given the handler output.
+
+        Convention for composed apps: a handler returning a vector whose first
+        element is < 0 suppresses synchronous downstream calls (the 'filtered'
+        branch of the paper's fig 8 filters)."""
+        first = float(np.asarray(y).ravel()[0]) if np.asarray(y).size else 0.0
+        fire = first >= 0.0
+        out = [(c, False) for c in spec.calls if fire]
+        out += [(c, True) for c in spec.async_calls]
+        return out
+
+    def _nearest_deployment(self, fn_name: str, from_node: str) -> str:
+        nodes = self.naming.deployments_of(fn_name)
+        if not nodes:
+            raise KeyError(f"{fn_name} not deployed anywhere")
+        return min(nodes, key=lambda n: self.net.rtt_ms(from_node, n))
+
+    # -------------------------------------------------------------- debugging
+    def store_of(self, kg: str, node: str) -> Store:
+        return self.nodes[node].stores[kg]
+
+    def flush_replication(self, t: float = float("inf")) -> None:
+        for n in self.nodes:
+            self._deliver_until(n, t)

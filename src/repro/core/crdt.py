@@ -1,0 +1,119 @@
+"""Convergent replicated data types (CRDTs) as pure jnp merge functions.
+
+The paper (§2) notes applications can resolve concurrent-update conflicts with
+CRDTs [Shapiro et al. 2011].  Every merge here is **commutative, associative
+and idempotent** (property-tested in tests/test_crdt_properties.py), which is
+what makes Enoki's asynchronous anti-entropy safe: replicas converge no matter
+the order or repetition of merge rounds.
+
+All merges operate on arrays so they can run inside jitted replication steps
+and, for large state, inside the ``enoki_merge`` Pallas kernel.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# LWW register: (value, packed_version) — merge keeps the higher version.
+# ---------------------------------------------------------------------------
+
+class LWWRegister(NamedTuple):
+    value: jnp.ndarray      # (..., payload)
+    version: jnp.ndarray    # (...,) packed lamport version
+
+
+def lww_merge(a: LWWRegister, b: LWWRegister) -> LWWRegister:
+    """Elementwise last-writer-wins.  version ties are identical writes."""
+    take_b = b.version > a.version
+    # broadcast the selection mask over trailing payload dims
+    mask = take_b.reshape(take_b.shape + (1,) * (a.value.ndim - take_b.ndim))
+    return LWWRegister(
+        value=jnp.where(mask, b.value, a.value),
+        version=jnp.maximum(a.version, b.version),
+    )
+
+
+# ---------------------------------------------------------------------------
+# G-counter: per-node grow-only counters; merge = elementwise max.
+# ---------------------------------------------------------------------------
+
+class GCounter(NamedTuple):
+    counts: jnp.ndarray     # (num_nodes,) int32 — one slot per node
+
+
+def gcounter_new(num_nodes: int) -> GCounter:
+    return GCounter(jnp.zeros((num_nodes,), jnp.int32))
+
+
+def gcounter_increment(c: GCounter, node_id, amount=1) -> GCounter:
+    return GCounter(c.counts.at[node_id].add(amount))
+
+
+def gcounter_merge(a: GCounter, b: GCounter) -> GCounter:
+    return GCounter(jnp.maximum(a.counts, b.counts))
+
+
+def gcounter_value(c: GCounter) -> jnp.ndarray:
+    return c.counts.sum()
+
+
+# ---------------------------------------------------------------------------
+# PN-counter: increments and decrements as two G-counters.
+# ---------------------------------------------------------------------------
+
+class PNCounter(NamedTuple):
+    pos: jnp.ndarray
+    neg: jnp.ndarray
+
+
+def pncounter_new(num_nodes: int) -> PNCounter:
+    z = jnp.zeros((num_nodes,), jnp.int32)
+    return PNCounter(z, z)
+
+
+def pncounter_add(c: PNCounter, node_id, amount) -> PNCounter:
+    amount = jnp.asarray(amount, jnp.int32)
+    pos = c.pos.at[node_id].add(jnp.maximum(amount, 0))
+    neg = c.neg.at[node_id].add(jnp.maximum(-amount, 0))
+    return PNCounter(pos, neg)
+
+
+def pncounter_merge(a: PNCounter, b: PNCounter) -> PNCounter:
+    return PNCounter(jnp.maximum(a.pos, b.pos), jnp.maximum(a.neg, b.neg))
+
+
+def pncounter_value(c: PNCounter) -> jnp.ndarray:
+    return c.pos.sum() - c.neg.sum()
+
+
+# ---------------------------------------------------------------------------
+# Max/min registers (grow-only extremes) — trivially CRDT.
+# ---------------------------------------------------------------------------
+
+def max_merge(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.maximum(a, b)
+
+
+def min_merge(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.minimum(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Version vectors: (num_nodes,) per-node high-water marks; merge = max.
+# A version vector is itself a G-counter-shaped CRDT.
+# ---------------------------------------------------------------------------
+
+def vv_new(num_nodes: int) -> jnp.ndarray:
+    return jnp.zeros((num_nodes,), jnp.int32)
+
+
+def vv_merge(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.maximum(a, b)
+
+
+def vv_dominates(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """True iff a >= b componentwise (a has seen everything b has)."""
+    return jnp.all(a >= b)

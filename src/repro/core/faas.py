@@ -1,0 +1,218 @@
+"""The FaaS layer (tinyFaaS role): function registry, deployment, invocation.
+
+The paper's programming model (Listing 1)::
+
+    import kv
+    def call(i: str) -> str:
+        curr = kv.get(key="current")
+        ...
+        kv.set(key="current", val=curr)
+        return curr
+
+is preserved as::
+
+    @enoki_function(keygroups=["avg"])
+    def call(kv, i):
+        curr = kv.get("current")
+        ...
+        kv.set("current", curr)
+        return curr
+
+``kv`` is a handle whose get/set/scan/delete trace to pure ops on a
+``Store`` threaded through the handler; deployment jit-compiles the wrapper
+``(store, clock, input) -> (store', clock', output)``.  As in the paper,
+"global imports stay warm": compilation happens once at deploy time, so warm
+invocations pay no setup cost.
+
+Values are encoded by per-keygroup codecs (the arena stores fixed-width
+rows).  Key *strings* are hashed at trace time — they are static, exactly
+like the paper's literal key names.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.store import Store, kv_delete, kv_get, kv_scan, kv_set
+from repro.core.versioning import fnv1a
+
+
+# ---------------------------------------------------------------------------
+# Codecs: python value <-> fixed-width arena row
+# ---------------------------------------------------------------------------
+
+class VectorCodec:
+    """Float32 vectors up to ``width`` elements (scalars are width-1 views)."""
+
+    def __init__(self, width: int):
+        self.width = width
+
+    def encode(self, val) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        arr = jnp.atleast_1d(jnp.asarray(val, jnp.float32))
+        n = arr.shape[0]
+        if n > self.width:
+            raise ValueError(f"value of length {n} exceeds arena width {self.width}")
+        row = jnp.zeros((self.width,), jnp.float32).at[:n].set(arr)
+        return row, jnp.int32(n)
+
+    def decode(self, row: jnp.ndarray, length: jnp.ndarray) -> jnp.ndarray:
+        # static-width view; mask the padding so stale bytes never leak
+        idx = jnp.arange(self.width)
+        return jnp.where(idx < length, row, 0.0)
+
+
+class BytesCodec:
+    """uint8 payloads (for the size-sweep throughput benchmarks)."""
+
+    def __init__(self, width: int):
+        self.width = width
+
+    def encode(self, val) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        arr = jnp.asarray(val, jnp.uint8)
+        n = arr.shape[0]
+        row = jnp.zeros((self.width,), jnp.uint8).at[:n].set(arr)
+        return row, jnp.int32(n)
+
+    def decode(self, row, length):
+        return row  # callers slice by length host-side
+
+
+# ---------------------------------------------------------------------------
+# The kv handle (Listing 1's `import kv`)
+# ---------------------------------------------------------------------------
+
+class KV:
+    """Functional KV handle: mutating methods rebind the wrapped store.
+
+    Also counts operations and payload bytes — the invocation layer charges
+    network costs per op for remote placements (CLOUD_CENTRAL/PEER_FETCH),
+    which is how the paper's per-op round-trips (§4.1: 4 ops -> +200 ms)
+    are accounted.
+    """
+
+    def __init__(self, store: Store, clock: jnp.ndarray, node_id: int,
+                 codec: VectorCodec):
+        self._store = store
+        self._clock = clock
+        self._node_id = node_id
+        self._codec = codec
+        self.ops: List[Tuple[str, int]] = []   # (kind, payload_bytes)
+
+    # -- paper API ----------------------------------------------------------
+    def get(self, key: str):
+        h = fnv1a(key)
+        row, length, _, found = kv_get(self._store, h)
+        val = self._codec.decode(row, length)
+        nbytes = int(np.dtype(np.float32).itemsize) * self._codec.width
+        self.ops.append(("get", nbytes))
+        return val, found
+
+    def set(self, key: str, val) -> None:
+        h = fnv1a(key)
+        row, length = self._codec.encode(val)
+        self._store, self._clock, ok = kv_set(
+            self._store, h, row, length, self._clock, self._node_id)
+        self.ops.append(("set", int(row.nbytes)))
+
+    def scan(self, keys: Sequence[str]):
+        hashes = [fnv1a(k) for k in keys]
+        vals, lengths, founds = kv_scan(self._store, hashes)
+        idx = jnp.arange(vals.shape[1])[None, :]
+        vals = jnp.where(idx < lengths[:, None], vals, 0.0)
+        self.ops.append(("scan", int(vals.nbytes)))
+        return vals, founds
+
+    def delete(self, key: str) -> None:
+        h = fnv1a(key)
+        self._store, self._clock, _ = kv_delete(
+            self._store, h, self._clock, self._node_id)
+        self.ops.append(("delete", 0))
+
+    # -- plumbing -------------------------------------------------------------
+    @property
+    def state(self) -> Tuple[Store, jnp.ndarray]:
+        return self._store, self._clock
+
+
+# ---------------------------------------------------------------------------
+# Function registry + deployment
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FunctionSpec:
+    name: str
+    handler: Callable            # handler(kv, x) -> y
+    keygroups: List[str]
+    codec_width: int = 64
+    calls: List[str] = dataclasses.field(default_factory=list)  # downstream fns
+    async_calls: List[str] = dataclasses.field(default_factory=list)
+
+
+_REGISTRY: Dict[str, FunctionSpec] = {}
+
+
+def enoki_function(name: Optional[str] = None, keygroups: Sequence[str] = (),
+                   codec_width: int = 64, calls: Sequence[str] = (),
+                   async_calls: Sequence[str] = ()):
+    """Decorator registering a stateful FaaS function."""
+
+    def wrap(fn: Callable) -> Callable:
+        spec = FunctionSpec(name=name or fn.__name__, handler=fn,
+                            keygroups=list(keygroups), codec_width=codec_width,
+                            calls=list(calls), async_calls=list(async_calls))
+        _REGISTRY[spec.name] = spec
+        fn.spec = spec
+        return fn
+
+    return wrap
+
+
+def get_function(name: str) -> FunctionSpec:
+    return _REGISTRY[name]
+
+
+def registry() -> Dict[str, FunctionSpec]:
+    return dict(_REGISTRY)
+
+
+def compile_handler(spec: FunctionSpec, node_id: int,
+                    example_input: Any) -> Callable:
+    """Jit the pure wrapper around the user handler (deploy-time).
+
+    Returns ``step(store, clock, x) -> (store', clock', y, op_log)`` where
+    op_log is the static per-invocation (kind, bytes) trace used for network
+    accounting (it is identical across invocations by construction: key
+    strings and shapes are static, as in the paper's functions).
+    """
+    codec = VectorCodec(spec.codec_width)
+    op_log: List[Tuple[str, int]] = []
+
+    def pure(store: Store, clock: jnp.ndarray, x):
+        kv = KV(store, clock, node_id, codec)
+        y = spec.handler(kv, x)
+        op_log.clear()
+        op_log.extend(kv.ops)
+        new_store, new_clock = kv.state
+        return new_store, new_clock, y
+
+    jitted = jax.jit(pure)
+    # trace once to populate the op log and warm the cache (warm start)
+    _ = jax.eval_shape(pure, *_example_state(spec, example_input, node_id))
+
+    def step(store, clock, x):
+        return jitted(store, clock, x) + (list(op_log),)
+
+    step.op_log = op_log
+    return step
+
+
+def _example_state(spec: FunctionSpec, example_input, node_id):
+    from repro.core.store import store_new
+    from repro.core.versioning import MAX_NODES
+
+    store = store_new(64, spec.codec_width, MAX_NODES)
+    return store, jnp.zeros((), jnp.int32), example_input

@@ -1,0 +1,94 @@
+"""Edge-cloud network model (the tc-netem role in the paper's testbed).
+
+The paper emulates its network with ``tc-netem``: 50 ms RTT and 100 Mb/s
+between edge and cloud, 20 ms RTT and 100 Mb/s between edge nodes (§4.1,
+§4.3).  We model the same quantities explicitly; the figure-reproduction
+benchmarks combine this model with *measured* local compute/store times to
+recover the paper's end-to-end latency results on hardware we don't have.
+
+At TPU scale the analogous quantities come from the roofline constants
+(ICI/DCN bandwidth) instead — see launch/roofline.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Link:
+    rtt_ms: float
+    bandwidth_mbps: float      # megaBITS per second, like the paper's 100Mb/s
+
+    @property
+    def one_way_ms(self) -> float:
+        return self.rtt_ms / 2.0
+
+    def transfer_ms(self, nbytes: int) -> float:
+        if self.bandwidth_mbps <= 0:
+            return 0.0
+        return (nbytes * 8.0) / (self.bandwidth_mbps * 1e6) * 1e3
+
+
+LOCAL_LINK = Link(rtt_ms=0.0, bandwidth_mbps=0.0)   # same node
+
+
+@dataclasses.dataclass
+class NetworkModel:
+    links: Dict[Tuple[str, str], Link]
+    default: Link = Link(rtt_ms=50.0, bandwidth_mbps=100.0)
+
+    def link(self, a: str, b: str) -> Link:
+        if a == b:
+            return LOCAL_LINK
+        return self.links.get((a, b)) or self.links.get((b, a)) or self.default
+
+    def rtt_ms(self, a: str, b: str) -> float:
+        return self.link(a, b).rtt_ms
+
+    def one_way_ms(self, a: str, b: str) -> float:
+        return self.link(a, b).one_way_ms
+
+    def request_ms(self, a: str, b: str, payload_bytes: int = 0,
+                   response_bytes: int = 0) -> float:
+        """One request/response exchange: RTT + serialisation of both payloads."""
+        l = self.link(a, b)
+        return l.rtt_ms + l.transfer_ms(payload_bytes) + l.transfer_ms(response_bytes)
+
+
+def paper_topology() -> NetworkModel:
+    """The §4 testbed: client, edge (x2 for §4.3), cloud.
+
+    client<->edge is LAN-local (sub-ms; we use 1 ms RTT), edge<->cloud is
+    50 ms RTT / 100 Mb/s, edge<->edge is 20 ms RTT / 100 Mb/s.
+    """
+    e_c = Link(rtt_ms=50.0, bandwidth_mbps=100.0)
+    e_e = Link(rtt_ms=20.0, bandwidth_mbps=100.0)
+    lan = Link(rtt_ms=1.0, bandwidth_mbps=1000.0)
+    return NetworkModel(links={
+        ("client", "edge"): lan,
+        ("client", "edge1"): lan,
+        ("client", "edge2"): Link(rtt_ms=21.0, bandwidth_mbps=100.0),
+        ("client", "cloud"): e_c,
+        ("edge", "cloud"): e_c,
+        ("edge1", "cloud"): e_c,
+        ("edge2", "cloud"): e_c,
+        ("edge", "edge1"): e_e,
+        ("edge", "edge2"): e_e,
+        ("edge1", "edge2"): e_e,
+    })
+
+
+def tpu_pod_topology(num_pods: int = 2, dcn_gbps: float = 25.0) -> NetworkModel:
+    """Inter-pod DCN as a network model (for the serving router's cost model).
+
+    ~25 GB/s effective DCN per pod pair, ~1 ms RTT; intra-pod ICI handled by
+    XLA collectives, not this model.
+    """
+    links = {}
+    for i in range(num_pods):
+        for j in range(i + 1, num_pods):
+            links[(f"pod{i}", f"pod{j}")] = Link(rtt_ms=1.0,
+                                                 bandwidth_mbps=dcn_gbps * 8e3)
+    return NetworkModel(links=links, default=Link(rtt_ms=1.0,
+                                                  bandwidth_mbps=dcn_gbps * 8e3))

@@ -1,0 +1,127 @@
+"""Anti-entropy replication engine.
+
+The paper's data plane: replicas exchange updates peer-to-peer and converge
+via merge (LWW/CRDT).  Two execution contexts share the same merge code:
+
+* **Logical nodes** (CPU benchmarks, the Cluster simulator): replica states
+  are separate pytrees; ``anti_entropy_round`` merges every pair (all-to-all)
+  or a gossip ring.
+* **TPU pods** (the real target): replica states live on the ``pod`` mesh
+  axis.  ``replicate_pod_axis`` runs under ``shard_map``; the exchange is an
+  ``all_gather`` (full anti-entropy) or ``ppermute`` ring (gossip round) over
+  the pod axis, followed by the same merges.  Crucially this is a SEPARATE
+  jitted step from train/serve — replication stays off the hot path, which
+  is the paper's whole point.
+
+Delta compression (int8) for large tensor keygroups lives in
+``optim/compression.py`` and is applied by the caller before exchange.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, List, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.keygroup import TensorKeygroup, merge_tensor_keygroups
+from repro.core.store import Store, merge_stores
+
+
+# ---------------------------------------------------------------------------
+# Logical-node anti-entropy (benchmarks / simulator)
+# ---------------------------------------------------------------------------
+
+def anti_entropy_round(replicas: List[Any], merge: Callable[[Any, Any], Any],
+                       topology: str = "full") -> List[Any]:
+    """One anti-entropy round over logical replicas.
+
+    topology="full": every replica merges every other (converges in 1 round).
+    topology="ring": replica i merges from (i-1) mod N (converges in N-1).
+    """
+    n = len(replicas)
+    if n <= 1:
+        return list(replicas)
+    if topology == "full":
+        out = []
+        for i in range(n):
+            acc = replicas[i]
+            for j in range(n):
+                if j != i:
+                    acc = merge(acc, replicas[j])
+            out.append(acc)
+        return out
+    if topology == "ring":
+        return [merge(replicas[i], replicas[(i - 1) % n]) for i in range(n)]
+    raise ValueError(f"unknown topology {topology!r}")
+
+
+def converge(replicas: List[Any], merge: Callable[[Any, Any], Any],
+             topology: str = "full") -> List[Any]:
+    """Run rounds until convergence is guaranteed by topology."""
+    rounds = 1 if topology == "full" else max(1, len(replicas) - 1)
+    for _ in range(rounds):
+        replicas = anti_entropy_round(replicas, merge, topology)
+    return replicas
+
+
+# ---------------------------------------------------------------------------
+# Pod-axis anti-entropy (TPU scale, inside shard_map)
+# ---------------------------------------------------------------------------
+
+def _merge_gathered(gathered: Any, merge: Callable[[Any, Any], Any], n: int) -> Any:
+    """Fold-merge replicas stacked on a leading axis of size n."""
+    take = lambda tree, i: jax.tree.map(lambda x: x[i], tree)
+    acc = take(gathered, 0)
+    for i in range(1, n):
+        acc = merge(acc, take(gathered, i))
+    return acc
+
+
+def replicate_pod_axis(state: Any, merge: Callable[[Any, Any], Any],
+                       axis_name: str = "pod", num_pods: int = 2,
+                       topology: str = "full") -> Any:
+    """Anti-entropy over the pod mesh axis.  MUST run inside shard_map with
+    ``axis_name`` in scope.  ``state`` is this pod's replica (pytree).
+
+    full: all_gather everyone's replica, fold-merge  (1 round to converge)
+    ring: ppermute from the previous pod, merge once (gossip round)
+    """
+    if topology == "full":
+        gathered = jax.tree.map(
+            lambda x: jax.lax.all_gather(x, axis_name, axis=0), state)
+        return _merge_gathered(gathered, merge, num_pods)
+    if topology == "ring":
+        perm = [((i + 1) % num_pods, i) for i in range(num_pods)]
+        neighbour = jax.tree.map(
+            lambda x: jax.lax.ppermute(x, axis_name, perm), state)
+        return merge(state, neighbour)
+    raise ValueError(f"unknown topology {topology!r}")
+
+
+def make_pod_replicate_step(mesh, merge: Callable[[Any, Any], Any],
+                            state_specs: Any, num_pods: int,
+                            topology: str = "full"):
+    """Build the jitted off-hot-path replication step for a pod mesh.
+
+    ``state_specs`` are the *intra-pod* PartitionSpecs of the replica state
+    (no 'pod' entry: the state is replicated across pods, sharded within).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    fn = functools.partial(replicate_pod_axis, merge=merge,
+                           axis_name="pod", num_pods=num_pods,
+                           topology=topology)
+    return jax.jit(shard_map(fn, mesh=mesh, in_specs=(state_specs,),
+                             out_specs=state_specs, check_rep=False))
+
+
+# Convenience merges for the two keygroup flavours --------------------------
+
+def merge_arena(a: Store, b: Store) -> Store:
+    return merge_stores(a, b)
+
+
+def merge_tensor(a: TensorKeygroup, b: TensorKeygroup) -> TensorKeygroup:
+    return merge_tensor_keygroups(a, b)

@@ -1,0 +1,105 @@
+"""Client-side router: nearest-replica selection, session affinity, hedging.
+
+The paper's clients "directly access their local, lightweight edge FaaS
+instances" (§6) — the router codifies that: pick the lowest-latency live
+deployment that satisfies the session's consistency requirement, with an
+optional hedged second request as straggler mitigation (runtime tier).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cluster import Cluster, InvokeResult
+from repro.core.consistency import Session
+from repro.core.network import NetworkModel
+
+
+@dataclasses.dataclass
+class RouterStats:
+    requests: int = 0
+    hedges_fired: int = 0
+    hedge_wins: int = 0
+    redirects_for_consistency: int = 0
+
+
+class Router:
+    def __init__(self, cluster: Cluster, client: str = "client",
+                 hedge_after_ms: Optional[float] = None):
+        self.cluster = cluster
+        self.client = client
+        self.hedge_after_ms = hedge_after_ms
+        self.stats = RouterStats()
+        self.sessions: Dict[str, Session] = {}
+
+    # ------------------------------------------------------------------ picks
+    def candidates(self, fn_name: str) -> List[str]:
+        alive = set(self.cluster.naming.alive_nodes())
+        nodes = [n for n in self.cluster.naming.deployments_of(fn_name)
+                 if n in alive]
+        return sorted(nodes,
+                      key=lambda n: self.cluster.net.rtt_ms(self.client, n))
+
+    def pick(self, fn_name: str, session: Optional[Session] = None) -> str:
+        cands = self.candidates(fn_name)
+        if not cands:
+            raise KeyError(f"no live deployment of {fn_name}")
+        if session is not None:
+            spec = self.cluster.specs[fn_name]
+            kg = spec.keygroups[0] if spec.keygroups else None
+            if kg is not None:
+                for n in cands:
+                    vv = np.asarray(self.cluster.store_of(kg, n).vv) \
+                        if kg in self.cluster.nodes[n].stores else None
+                    if vv is not None and session.can_read_from(vv):
+                        if n != cands[0]:
+                            self.stats.redirects_for_consistency += 1
+                        return n
+                # nobody satisfies yet -> nearest replica; caller may retry
+                return cands[0]
+        return cands[0]
+
+    # ----------------------------------------------------------------- invoke
+    def invoke(self, fn_name: str, x, t_send: float = 0.0,
+               session_id: Optional[str] = None,
+               payload_bytes: int = 64) -> InvokeResult:
+        session = None
+        if session_id is not None:
+            from repro.core.versioning import MAX_NODES
+            session = self.sessions.setdefault(
+                session_id, Session(num_nodes=MAX_NODES))
+        node = self.pick(fn_name, session)
+        self.stats.requests += 1
+        res = self.cluster.invoke(fn_name, node, x, t_send=t_send,
+                                  client=self.client,
+                                  payload_bytes=payload_bytes)
+
+        # hedged request: if the primary exceeded the hedge deadline, fire the
+        # second-nearest replica and take the earlier completion (straggler
+        # mitigation; only sensible for read-dominated handlers).
+        if (self.hedge_after_ms is not None
+                and res.response_ms > self.hedge_after_ms):
+            cands = self.candidates(fn_name)
+            if len(cands) > 1:
+                self.stats.hedges_fired += 1
+                alt = self.cluster.invoke(
+                    fn_name, cands[1], x,
+                    t_send=t_send + self.hedge_after_ms,
+                    client=self.client, payload_bytes=payload_bytes)
+                if alt.t_received < res.t_received:
+                    self.stats.hedge_wins += 1
+                    res = alt
+
+        if session is not None:
+            spec = self.cluster.specs[fn_name]
+            kg = spec.keygroups[0] if spec.keygroups else None
+            if kg is not None and kg in self.cluster.nodes[res.node].stores:
+                vv = np.asarray(self.cluster.store_of(kg, res.node).vv)
+                session.observe_read(vv)
+                wrote = any(k in ("set", "delete") for k, _ in res.kv_ops)
+                if wrote:
+                    nd = self.cluster.nodes[res.node]
+                    session.observe_write(nd.node_id, int(nd.clock))
+        return res

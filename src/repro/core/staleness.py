@@ -1,0 +1,46 @@
+"""Staleness measurement (paper §4.3).
+
+"We consider a value as stale if it has been overwritten before the client
+reads it, with staleness measured as difference between current (read) time
+and timestamp of the operation that changed the value."
+
+The benchmark drives a single logical client (no clock drift, as in the
+paper) writing monotonically increasing payloads; given the write log and a
+read observation these helpers compute the paper's staleness statistic.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class WriteLog:
+    """Ordered (t_applied, payload_id) records of one key's writes."""
+
+    records: List[Tuple[float, int]] = dataclasses.field(default_factory=list)
+
+    def add(self, t_applied: float, payload_id: int) -> None:
+        self.records.append((t_applied, payload_id))
+
+    def staleness_of_read(self, t_read: float, payload_id: int) -> float:
+        """0.0 if the read value was the newest applied at t_read; otherwise
+        t_read - t_apply(first write that overwrote it)."""
+        newer = [t for t, p in self.records if p > payload_id and t <= t_read]
+        if not newer:
+            return 0.0
+        return t_read - min(newer)
+
+    def latest_at(self, t: float) -> Optional[int]:
+        cands = [(ta, p) for ta, p in self.records if ta <= t]
+        return max(cands)[1] if cands else None
+
+
+def percentiles(xs: List[float], ps=(50, 90, 99)) -> dict:
+    import numpy as np
+
+    if not xs:
+        return {p: float("nan") for p in ps}
+    arr = np.asarray(xs)
+    return {p: float(np.percentile(arr, p)) for p in ps}

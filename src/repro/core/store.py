@@ -1,0 +1,217 @@
+"""The node-local key-value store (FReD-replica analogue).
+
+JAX requires static shapes, so a store replica is a fixed-capacity *arena*:
+
+    keys      (S,)    int32   FNV-1a key hashes, 0 == empty slot
+    values    (S, V)  dtype   fixed-width payload rows (padded)
+    lengths   (S,)    int32   actual payload length; -1 == tombstone
+    versions  (S,)    int32   packed lamport versions (see versioning.py)
+    vv        (N,)    int32   version vector: highest clock seen per node
+
+All operations are pure functions (jit-friendly); the imperative ``kv.get`` /
+``kv.set`` programming model of the paper's Listing 1 is recovered by the
+``KV`` handle in ``faas.py`` which threads a ``Store`` through the handler.
+
+Writes that find neither their key nor an empty slot are dropped with
+``ok=False`` (arena overflow) — the FaaS layer surfaces this as an error, the
+same way FReD surfaces storage-backend failures.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.versioning import VERSION_DTYPE, pack_version
+
+
+class Store(NamedTuple):
+    keys: jnp.ndarray       # (S,) int32
+    values: jnp.ndarray     # (S, V)
+    lengths: jnp.ndarray    # (S,) int32; -1 marks a tombstone
+    versions: jnp.ndarray   # (S,) int32 packed
+    vv: jnp.ndarray         # (N,) int32 version vector
+
+    @property
+    def slots(self) -> int:
+        return self.keys.shape[0]
+
+    @property
+    def value_width(self) -> int:
+        return self.values.shape[1]
+
+
+def store_new(slots: int, value_width: int, num_nodes: int,
+              dtype=jnp.float32) -> Store:
+    return Store(
+        keys=jnp.zeros((slots,), jnp.int32),
+        values=jnp.zeros((slots, value_width), dtype),
+        lengths=jnp.zeros((slots,), jnp.int32),
+        versions=jnp.zeros((slots,), VERSION_DTYPE),
+        vv=jnp.zeros((num_nodes,), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Single-key ops
+# ---------------------------------------------------------------------------
+
+def _locate(store: Store, key_hash) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(slot_index, found).  slot_index is the match or the first empty slot."""
+    match = store.keys == key_hash
+    found = match.any()
+    empty = store.keys == 0
+    slot = jnp.where(found, jnp.argmax(match), jnp.argmax(empty))
+    ok = found | empty.any()
+    return slot, found, ok
+
+
+def kv_get(store: Store, key_hash) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (value_row, length, version, found).  Tombstones read as absent."""
+    slot, found, _ = _locate(store, key_hash)
+    live = found & (store.lengths[slot] >= 0)
+    value = jnp.where(live, store.values[slot], jnp.zeros_like(store.values[slot]))
+    length = jnp.where(live, store.lengths[slot], 0)
+    version = jnp.where(found, store.versions[slot], 0)
+    return value, length, version, live
+
+
+def kv_set(store: Store, key_hash, value_row, length, clock, node_id
+           ) -> Tuple[Store, jnp.ndarray, jnp.ndarray]:
+    """Write (upsert).  Returns (store', new_clock, ok).
+
+    The node's lamport clock advances past everything this replica has seen
+    (max of vv) so versions from causally-later writes always dominate.
+    """
+    slot, _, ok = _locate(store, key_hash)
+    new_clock = jnp.maximum(clock, store.vv.max()) + 1
+    version = pack_version(new_clock, node_id)
+    write = ok  # drop on arena overflow
+
+    def apply(s: Store) -> Store:
+        return Store(
+            keys=s.keys.at[slot].set(key_hash),
+            values=s.values.at[slot].set(value_row.astype(s.values.dtype)),
+            lengths=s.lengths.at[slot].set(length),
+            versions=s.versions.at[slot].set(version),
+            vv=s.vv.at[node_id].max(new_clock),
+        )
+
+    new_store = jax.tree.map(
+        lambda a, b: jnp.where(
+            write.reshape((1,) * a.ndim), b, a) if a.ndim else jnp.where(write, b, a),
+        store, apply(store))
+    return new_store, jnp.where(write, new_clock, clock), write
+
+
+def kv_delete(store: Store, key_hash, clock, node_id) -> Tuple[Store, jnp.ndarray, jnp.ndarray]:
+    """Tombstone write (length = -1) so deletes replicate like updates."""
+    zero = jnp.zeros((store.value_width,), store.values.dtype)
+    slot, found, _ = _locate(store, key_hash)
+    new_clock = jnp.maximum(clock, store.vv.max()) + 1
+    version = pack_version(new_clock, node_id)
+
+    def apply(s: Store) -> Store:
+        return Store(
+            keys=s.keys,
+            values=s.values.at[slot].set(zero),
+            lengths=s.lengths.at[slot].set(-1),
+            versions=s.versions.at[slot].set(version),
+            vv=s.vv.at[node_id].max(new_clock),
+        )
+
+    new_store = jax.tree.map(
+        lambda a, b: jnp.where(
+            found.reshape((1,) * a.ndim), b, a) if a.ndim else jnp.where(found, b, a),
+        store, apply(store))
+    return new_store, jnp.where(found, new_clock, clock), found
+
+
+def kv_scan(store: Store, key_hashes) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Vectorised multi-get: (values (K,V), lengths (K,), found (K,))."""
+    def one(h):
+        v, l, _, f = kv_get(store, h)
+        return v, l, f
+
+    return jax.vmap(one)(jnp.asarray(key_hashes, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Replica merge (the anti-entropy inner op)
+# ---------------------------------------------------------------------------
+
+def merge_stores(a: Store, b: Store) -> Store:
+    """LWW merge of replica ``b`` into ``a`` (pure; commutative up to slot
+    permutation, and convergent: merged *contents* are order-independent).
+
+    1. keys present in both  -> keep the higher packed version,
+    2. keys only in ``b``    -> insert into a's empty slots (rank-matched),
+    3. version vectors       -> elementwise max.
+
+    O(S^2) comparisons; S is small (<=256) for arena keygroups.  Large tensor
+    keygroups use slot-aligned merges (see replication.py) or the
+    ``enoki_merge`` Pallas kernel instead.
+    """
+    S = a.slots
+    b_live = b.keys != 0
+    # --- 1. matched keys -------------------------------------------------
+    match = (a.keys[:, None] == b.keys[None, :]) & b_live[None, :]   # (Sa, Sb)
+    a_has_match = match.any(axis=1)
+    b_idx = jnp.argmax(match, axis=1)                                 # (Sa,)
+    b_versions = b.versions[b_idx]
+    take_b = a_has_match & (b_versions > a.versions)
+
+    def sel(av, bv):
+        mask = take_b.reshape(take_b.shape + (1,) * (av.ndim - 1))
+        return jnp.where(mask, bv[b_idx], av)
+
+    keys = jnp.where(take_b, b.keys[b_idx], a.keys)
+    values = sel(a.values, b.values)
+    lengths = jnp.where(take_b, b.lengths[b_idx], a.lengths)
+    versions = jnp.where(take_b, b_versions, a.versions)
+
+    # --- 2. b-only keys -> empty slots of a -------------------------------
+    b_matched = match.any(axis=0)                                     # (Sb,)
+    b_new = b_live & ~b_matched
+    empty = keys == 0
+    # rank-match: the i-th new b key goes to the i-th empty a slot
+    empty_rank = jnp.cumsum(empty) - 1                                # (Sa,)
+    new_rank = jnp.cumsum(b_new) - 1                                  # (Sb,)
+    num_empty = empty.sum()
+    # for each a slot: which new b key lands here (if any)?
+    lands = (empty[:, None] & b_new[None, :]
+             & (empty_rank[:, None] == new_rank[None, :]))            # (Sa, Sb)
+    has_insert = lands.any(axis=1)
+    src = jnp.argmax(lands, axis=1)
+    # respect capacity: ranks beyond num_empty simply find no empty slot (mask
+    # already guarantees that since empty_rank < num_empty on empty slots).
+    del num_empty
+
+    def ins(cur, bv):
+        mask = has_insert.reshape(has_insert.shape + (1,) * (cur.ndim - 1))
+        return jnp.where(mask, bv[src], cur)
+
+    keys = jnp.where(has_insert, b.keys[src], keys)
+    values = ins(values, b.values)
+    lengths = jnp.where(has_insert, b.lengths[src], lengths)
+    versions = jnp.where(has_insert, b.versions[src], versions)
+
+    # --- 3. version vectors ------------------------------------------------
+    vv = jnp.maximum(a.vv, b.vv)
+    return Store(keys=keys, values=values, lengths=lengths,
+                 versions=versions, vv=vv)
+
+
+def store_contents(store: Store) -> dict:
+    """Host-side canonical view {key_hash: (version, length, value)} for tests."""
+    out = {}
+    keys = jax.device_get(store.keys)
+    lengths = jax.device_get(store.lengths)
+    versions = jax.device_get(store.versions)
+    values = jax.device_get(store.values)
+    for i, k in enumerate(keys):
+        if k != 0:
+            out[int(k)] = (int(versions[i]), int(lengths[i]),
+                           values[i].tolist())
+    return out

@@ -1,0 +1,59 @@
+"""Enoki versioned merge kernel, Pallas TPU — the paper-specific hot spot.
+
+Anti-entropy over multi-GB replicated state (session KV caches, pod
+parameter replicas) reduces to one elementwise-ish primitive: *versioned
+last-writer-wins select* over (value, version) pairs, slot-aligned:
+
+    out_val[i]  = b_val[i]  if b_ver[i] > a_ver[i] else a_val[i]
+    out_ver[i]  = max(a_ver[i], b_ver[i])
+
+where one version guards a row of V payload elements (the arena layout of
+core/store.py, and a (slot, feature-row) view of tensor keygroups).  The op
+is purely bandwidth-bound; the kernel's job on TPU is streaming both
+replicas through VMEM in (rows × V) tiles with zero intermediate
+materialisation — XLA's generic select would materialise the broadcasted
+predicate at full payload width in HBM.
+
+Rows tile defaults to 256 slots × the full payload width (payloads are
+padded to a 128 multiple by the caller).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _merge_kernel(av_ref, aver_ref, bv_ref, bver_ref, ov_ref, over_ref):
+    a_ver = aver_ref[...]                     # (rows,)
+    b_ver = bver_ref[...]
+    take_b = b_ver > a_ver
+    ov_ref[...] = jnp.where(take_b[:, None], bv_ref[...], av_ref[...])
+    over_ref[...] = jnp.maximum(a_ver, b_ver)
+
+
+def enoki_merge_rows(a_val, a_ver, b_val, b_ver, *, rows_tile: int = 256,
+                     interpret: bool = False):
+    """a_val/b_val (R, V); a_ver/b_ver (R,) int32 packed versions.
+    Returns (merged_val (R, V), merged_ver (R,))."""
+    R, V = a_val.shape
+    rt = min(rows_tile, R)
+    assert R % rt == 0, (R, rt)
+    grid = (R // rt,)
+    val_spec = pl.BlockSpec((rt, V), lambda i: (i, 0))
+    ver_spec = pl.BlockSpec((rt,), lambda i: (i,))
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pl.pallas_call(
+        _merge_kernel,
+        grid=grid,
+        in_specs=[val_spec, ver_spec, val_spec, ver_spec],
+        out_specs=[val_spec, ver_spec],
+        out_shape=[jax.ShapeDtypeStruct((R, V), a_val.dtype),
+                   jax.ShapeDtypeStruct((R,), a_ver.dtype)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(a_val, a_ver, b_val, b_ver)

@@ -1,0 +1,38 @@
+"""Jit'd wrapper: versioned merge over arenas and flat tensor keygroups."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.enoki_merge.kernel import enoki_merge_rows
+
+
+@functools.partial(jax.jit, static_argnames=("rows_tile", "interpret"))
+def enoki_merge(a_val, a_ver, b_val, b_ver, *, rows_tile: int = 256,
+                interpret: bool = None):
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return enoki_merge_rows(a_val, a_ver, b_val, b_ver,
+                            rows_tile=rows_tile, interpret=interpret)
+
+
+def merge_flat_keygroup(a_flat: jnp.ndarray, a_ver: jnp.ndarray,
+                        b_flat: jnp.ndarray, b_ver: jnp.ndarray,
+                        row_width: int = 1024, interpret: bool = None):
+    """LWW-merge two flat replicas (N,) with per-row versions (N/row_width,).
+    Used by replication.py for large tensor keygroups where per-element
+    versions would double the state size."""
+    n = a_flat.shape[0]
+    rows = n // row_width
+    va, vb = (a_flat[:rows * row_width].reshape(rows, row_width),
+              b_flat[:rows * row_width].reshape(rows, row_width))
+    mv, mver = enoki_merge(va, a_ver, vb, b_ver, interpret=interpret)
+    out = mv.reshape(-1)
+    if rows * row_width < n:   # ragged tail: jnp fallback
+        tail_take_b = b_ver[-1] > a_ver[-1]
+        tail = jnp.where(tail_take_b, b_flat[rows * row_width:],
+                         a_flat[rows * row_width:])
+        out = jnp.concatenate([out, tail])
+    return out, mver

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the versioned LWW merge."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def enoki_merge_ref(a_val, a_ver, b_val, b_ver):
+    take_b = b_ver > a_ver
+    val = jnp.where(take_b[:, None], b_val, a_val)
+    ver = jnp.maximum(a_ver, b_ver)
+    return val, ver

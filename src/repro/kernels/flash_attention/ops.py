@@ -1,0 +1,32 @@
+"""Jit'd wrapper: model layout (B,S,H,Dh) <-> kernel layout (B,H,S,Dh).
+
+On CPU (tests, this container) the kernel runs in interpret mode; on TPU it
+lowers to Mosaic.  The wrapper is a drop-in replacement for
+``models.attention.blockwise_attention`` via ``AttnImpl.FLASH``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 256, bk: int = 512, interpret: bool = None):
+    """q (B,S,H,Dh); k,v (B,S,KV,Dh) -> (B,S,H,Dh)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                               bq=bq, bk=bk, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the flash attention kernel (O(S²) memory)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import reference_attention
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q (B,S,H,Dh); k,v (B,S,KV,Dh) -> (B,S,H,Dh)."""
+    B, Sq = q.shape[:2]
+    Skv = k.shape[1]
+    pos_q = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+    pos_k = jnp.broadcast_to(jnp.arange(Skv, dtype=jnp.int32), (B, Skv))
+    return reference_attention(q, k, v, pos_q, pos_k, causal=causal,
+                               window=window)

@@ -1,0 +1,21 @@
+"""Jit'd wrapper for the mLSTM chunk kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.mlstm_chunk.kernel import mlstm_chunk_bhsd
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_chunk(q, k, v, log_i, log_f, *, chunk: int = 64,
+                interpret: bool = None):
+    """Model layout: q/k/v (B,S,H,d); gates (B,S,H) -> (B,S,H,d)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    t = lambda x: x.transpose(0, 2, 1, 3)
+    g = lambda x: x.transpose(0, 2, 1)
+    h = mlstm_chunk_bhsd(t(q), t(k), t(v), g(log_i), g(log_f), chunk=chunk,
+                         interpret=interpret)
+    return t(h)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle: models.xlstm.mlstm_cell_seq (validated against the
+step recurrence by tests/test_models_parity.py)."""
+from __future__ import annotations
+
+from repro.models.xlstm import mlstm_cell_seq
+
+
+def mlstm_chunk_ref(q, k, v, log_i, log_f, *, chunk: int = 64):
+    """Kernel layout (B,H,S,d) / (B,H,S) -> (B,H,S,d)."""
+    t = lambda x: x.transpose(0, 2, 1, 3)
+    g = lambda x: x.transpose(0, 2, 1)
+    h, _ = mlstm_cell_seq(t(q), t(k), t(v), g(log_i), g(log_f), chunk)
+    return t(h)

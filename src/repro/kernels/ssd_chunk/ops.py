@@ -1,0 +1,24 @@
+"""Jit'd wrapper for the SSD chunk kernel (model layout <-> kernel layout)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_chunk.kernel import ssd_chunk_bhcp
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunk(x, a_dt, b, c, dt, *, chunk: int = 128,
+              interpret: bool = None):
+    """Model layout: x (B,S,H,P); a_dt/dt (B,S,H); b,c (B,S,N).
+    Returns y (B,S,H,P) (without the D skip — caller adds it)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    xw = (x * dt[..., None]).transpose(0, 2, 1, 3)
+    a = a_dt.transpose(0, 2, 1)
+    b4 = b[:, None] if b.ndim == 3 else b          # (B,1,S,N)
+    c4 = c[:, None] if c.ndim == 3 else c
+    y = ssd_chunk_bhcp(xw, a, b4, c4, chunk=chunk, interpret=interpret)
+    return y.transpose(0, 2, 1, 3)

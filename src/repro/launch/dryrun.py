@@ -1,0 +1,259 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (including repro.*):
+# jax locks the device count at first init.  512 placeholder host devices
+# back the production meshes: (16,16)=256 single-pod, (2,16,16)=512 two-pod.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this:
+  1. builds the jitted step (train_step / prefill_step / decode serve_step
+     per the shape's kind) with production shardings,
+  2. ``.lower(...)`` against ShapeDtypeStruct stand-ins (zero allocation),
+  3. ``.compile()`` — sharding mismatches, unsupported collectives, or
+     partitioning bugs fail HERE, which is the point of the exercise,
+  4. prints ``memory_analysis()`` (bytes/device: does it fit?) and
+     ``cost_analysis()``,
+  5. walks the compiled HLO for trip-count-aware FLOPs / bytes /
+     collective bytes (launch/roofline.py) and writes a JSON artifact to
+     --out for EXPERIMENTS.md §Dry-run/§Roofline.
+
+For multi-pod REPLICATED cells the Enoki replication step (anti-entropy
+over the pod axis) is lowered AS WELL and recorded separately — the hot
+step must show no additional cross-pod traffic vs the single-pod build.
+
+Usage:
+  python -m repro.launch.dryrun --arch internlm2-1.8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--policy replicated]
+  python -m repro.launch.dryrun --all --both-meshes --out artifacts/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+
+def _build_cell(arch, shape, mesh, policy, parallel=None, enoki=None,
+                impl=None):
+    """Returns (lower_fn, extras dict).  Deferred imports keep XLA_FLAGS
+    first."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import (AttnImpl, EnokiConfig, ReplicationPolicy,
+                                    StepKind)
+    from repro.launch import serve as serve_mod
+    from repro.launch import train as train_mod
+    from repro.models import model_zoo as zoo
+    from repro.parallel.sharding import batch_specs, named
+
+    if impl is None:
+        impl = AttnImpl(parallel.attn_impl) if parallel is not None \
+            else AttnImpl.REFERENCE
+    enoki = enoki or EnokiConfig(policy=ReplicationPolicy(policy))
+    extras = {}
+
+    if shape.step is StepKind.TRAIN:
+        parallel = parallel or train_mod.default_parallel(arch, shape)
+        jitted, sshape, (sspecs, bspecs) = train_mod.make_train_step(
+            arch, shape, mesh, parallel, enoki, impl=impl)
+        multi_pod = "pod" in mesh.shape
+        n_pods = mesh.shape.get("pod", 1)
+        b = shape.global_batch
+        bshape = zoo.input_specs(arch, shape)
+        if multi_pod and enoki.policy == ReplicationPolicy.REPLICATED:
+            bshape = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(
+                    (n_pods, s.shape[0] // n_pods) + s.shape[1:], s.dtype),
+                bshape)
+        extras["parallel"] = dataclasses.asdict(parallel)
+
+        def lower():
+            return jitted.lower(sshape, bshape)
+
+        rep = None
+        if multi_pod and enoki.policy == ReplicationPolicy.REPLICATED:
+            rstep, outer_shape, _ = train_mod.make_replicate_step(
+                arch, mesh, parallel, enoki, sshape)
+
+            def rep():
+                return rstep.lower(sshape, outer_shape)
+
+        return lower, rep, extras
+
+    if shape.step is StepKind.PREFILL:
+        jitted, pshape, (pspecs, bspecs, cspecs) = serve_mod.make_prefill_step(
+            arch, shape, mesh, parallel=parallel, impl=impl)
+        bshape = zoo.input_specs(arch, shape)
+
+        def lower():
+            return jitted.lower(pshape, bshape)
+
+        return lower, None, extras
+
+    # decode shapes
+    jitted, shapes, specs = serve_mod.make_decode_step(
+        arch, shape, mesh, parallel=parallel, enoki=enoki, impl=impl)
+
+    def lower():
+        return jitted.lower(shapes["params"], shapes["cache"],
+                            shapes["token"])
+
+    rep = None
+    if "pod" in mesh.shape:
+        rstep, rshape, _ = serve_mod.make_replicate_sessions_step(
+            arch, shape, mesh, enoki)
+
+        def rep():
+            return rstep.lower(rshape)
+
+    return lower, rep, extras
+
+
+def run_cell(arch_id: str, shape_id: str, multi_pod: bool, policy: str,
+             out_dir: str = None, verbose: bool = True,
+             overrides: dict = None, tag: str = ""):
+    import dataclasses as dc
+
+    import jax
+
+    from repro.configs import get_arch, get_shape, shape_applicable
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.roofline import analyze_hlo_text, roofline_terms
+    from repro.launch.train import default_parallel
+    from repro.models.model_zoo import model_flops
+
+    arch = get_arch(arch_id)
+    shape = get_shape(shape_id)
+    ok, reason = shape_applicable(arch, shape)
+    record = {"arch": arch_id, "shape": shape_id,
+              "mesh": "2x16x16" if multi_pod else "16x16",
+              "policy": policy, "skipped": not ok, "tag": tag}
+    if not ok:
+        record["skip_reason"] = reason
+        if verbose:
+            print(f"[skip] {arch_id} × {shape_id}: {reason}")
+        return _write(record, out_dir)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = len(mesh.devices.reshape(-1))
+    parallel = None
+    if overrides:
+        parallel = dc.replace(default_parallel(arch, shape), **overrides)
+        record["overrides"] = overrides
+    t0 = time.time()
+    try:
+        lower_fn, rep_fn, extras = _build_cell(arch, shape, mesh, policy,
+                                               parallel=parallel)
+        lowered = lower_fn()
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        txt = compiled.as_text()
+        walk = analyze_hlo_text(txt)
+        mf = model_flops(arch, shape)
+        terms = roofline_terms(walk, mf, chips)
+        record.update(
+            ok=True, chips=chips, lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory={
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "per_device_total": mem.argument_size_in_bytes
+                + mem.output_size_in_bytes + mem.temp_size_in_bytes
+                - mem.alias_size_in_bytes,
+            },
+            cost_analysis={"flops_body_once": ca.get("flops"),
+                           "bytes_body_once": ca.get("bytes accessed")},
+            hlo=walk, roofline=terms, **extras)
+        if rep_fn is not None:
+            rl = rep_fn().compile()
+            rwalk = analyze_hlo_text(rl.as_text())
+            record["replication_step"] = rwalk
+        if verbose:
+            dom = terms["dominant"]
+            print(f"[ok]   {arch_id:18s} × {shape_id:12s} mesh="
+                  f"{record['mesh']:8s} compile={t_compile:6.1f}s "
+                  f"mem/dev={record['memory']['per_device_total']/2**30:8.2f}GiB "
+                  f"flops/dev={walk['flops_per_device']:.3e} "
+                  f"coll/dev={walk['collective_bytes_per_device']:.3e}B "
+                  f"dominant={dom}")
+            print(f"       memory_analysis: {mem}")
+            print(f"       cost_analysis(body-once): flops="
+                  f"{ca.get('flops')}, bytes={ca.get('bytes accessed')}")
+    except Exception as e:
+        record.update(ok=False, error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[FAIL] {arch_id} × {shape_id} ({record['mesh']}): "
+                  f"{record['error']}")
+    return _write(record, out_dir)
+
+
+def _write(record, out_dir):
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = record.get("tag") or ""
+        name = (f"{record['arch']}_{record['shape']}_{record['mesh']}"
+                f"_{record.get('policy','-')}{('_' + tag) if tag else ''}"
+                f".json").replace("/", "-")
+        with open(os.path.join(out_dir, name), "w") as f:
+            json.dump(record, f, indent=1, default=str)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--policy", default="replicated",
+                    choices=["replicated", "peer_fetch", "cloud_central"])
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--tag", default="", help="artifact filename suffix")
+    ap.add_argument("--set", action="append", default=[],
+                    help="ParallelConfig overrides, e.g. --set moe_impl=ep "
+                         "--set remat=block --set fsdp=false")
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = ({"true": True, "false": False}.get(v.lower(), v))
+
+    from repro.configs import ARCH_IDS, SHAPES
+
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((a, s.name))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    n_fail = 0
+    for mp in meshes:
+        for a, s in cells:
+            rec = run_cell(a, s, mp, args.policy, args.out,
+                           overrides=overrides or None, tag=args.tag)
+            if not rec.get("ok", False) and not rec.get("skipped"):
+                n_fail += 1
+    print(f"\ndry-run complete: {len(cells)*len(meshes)} cells, "
+          f"{n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

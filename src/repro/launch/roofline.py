@@ -1,0 +1,547 @@
+"""Roofline extraction from compiled HLO.
+
+``compiled.cost_analysis()`` on the CPU backend counts every while body
+ONCE, which under-reports any scanned program (layers, KV blocks, SSD
+chunks) by the trip count.  This module therefore walks the
+post-optimization HLO text itself with a trip-count-aware cost model:
+
+  flops   2·prod(result_dims)·prod(contracting_dims) per dot (matmuls are
+          ≥99% of model FLOPs; elementwise ops are bandwidth-, not
+          compute-bound and are captured by the bytes term)
+  bytes   operands + result per top-level instruction; fusion internals are
+          free (they never touch HBM); dynamic-update-slice counts the
+          update region, not the aliased buffer
+  colls   operand bytes of all-gather / all-reduce / reduce-scatter /
+          all-to-all / collective-permute (+ ring-factor-adjusted wire
+          bytes as a second column)
+  while   body+condition costs × known_trip_count (nested loops multiply)
+
+All numbers are PER DEVICE of the SPMD-partitioned module, so the roofline
+terms divide by per-chip peaks directly:
+
+  compute_s    = flops / 197e12      (TPU v5e bf16 peak per chip)
+  memory_s     = bytes / 819e9       (HBM bandwidth per chip)
+  collective_s = coll_bytes / 50e9   (ICI per link; DCN for the pod axis)
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+            "after-all", "iota", "partition-id", "replica-id",
+            "opt-barrier", "custom-call"}
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16, "s4": 1, "u4": 1, "token": 0}
+
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+
+
+def _type_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _result_info(rhs: str) -> Tuple[int, List[Tuple[str, Tuple[int, ...]]], str]:
+    """Parse the result type(s) prefix of an instruction RHS.  Returns
+    (total_bytes, [(dtype, dims)], rest_after_types)."""
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                break
+        types = rhs[1:i]
+        rest = rhs[i + 1:].strip()
+    else:
+        sp = rhs.find(" ")
+        types = rhs[:sp]
+        rest = rhs[sp + 1:]
+    total = 0
+    shapes = []
+    for m in _TYPE_RE.finditer(types):
+        total += _type_bytes(m.group(1), m.group(2))
+        dims = tuple(int(d) for d in m.group(2).split(",") if d)
+        shapes.append((m.group(1), dims))
+    return total, shapes, rest
+
+
+def _operands(rest: str) -> Tuple[str, List[str], str, str]:
+    """(opcode, operand names, attrs, raw inner) from 'opcode(…), attrs…'."""
+    p = rest.find("(")
+    opcode = rest[:p].strip()
+    depth = 0
+    for i in range(p, len(rest)):
+        depth += rest[i] == "("
+        depth -= rest[i] == ")"
+        if depth == 0:
+            break
+    inner = rest[p + 1:i]
+    attrs = rest[i + 1:]
+    names = re.findall(r"%([\w\.\-]+)", inner)
+    return opcode, names, attrs, inner
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_bytes: int
+    result_shapes: List[Tuple[str, Tuple[int, ...]]]
+    operands: List[str]
+    attrs: str
+    inner: str = ""
+
+
+def parse_module(text: str) -> Tuple[Dict[str, List[Instr]], str]:
+    comps: Dict[str, List[Instr]] = {}
+    entry = None
+    current: Optional[str] = None
+    for line in text.splitlines():
+        if line.endswith("{") and not line.lstrip().startswith("//"):
+            m = _HEADER_RE.match(line.strip())
+            if m:
+                current = m.group(2)
+                comps[current] = []
+                if m.group(1):
+                    entry = current
+                continue
+        if line.strip() == "}":
+            current = None
+            continue
+        if current is None:
+            continue
+        m = _DEF_RE.match(line)
+        if not m or "=" not in line or "(" not in line:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        try:
+            rbytes, rshapes, rest = _result_info(rhs)
+            opcode, ops, attrs, inner = _operands(rest)
+        except Exception:
+            continue
+        comps[current].append(Instr(name, opcode, rbytes, rshapes, ops,
+                                    attrs, inner))
+    return comps, entry or next(iter(comps))
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_wire_bytes: float = 0.0       # ring-factor adjusted
+    coll_ops: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_count: int = 0
+    unknown_trip_counts: int = 0
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        self.coll_wire_bytes += other.coll_wire_bytes * mult
+        self.coll_count += int(other.coll_count * mult)
+        self.unknown_trip_counts += other.unknown_trip_counts
+        for k, v in other.coll_ops.items():
+            self.coll_ops[k] = self.coll_ops.get(k, 0.0) + v * mult
+
+
+def _dot_flops(instr: Instr, table: Dict[str, "Instr"]) -> float:
+    out_elems = 1
+    for _, dims in instr.result_shapes:
+        for d in dims:
+            out_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.attrs)
+    cdims = [int(x) for x in m.group(1).split(",") if x] if m else []
+    contract = 1
+    if instr.operands:
+        lhs = table.get(instr.operands[0])
+        if lhs is not None and lhs.result_shapes:
+            ldims = lhs.result_shapes[0][1]
+            for c in cdims:
+                if c < len(ldims):
+                    contract *= ldims[c]
+    return 2.0 * out_elems * contract
+
+
+def _ring_factor(instr: Instr) -> float:
+    """Wire bytes per device relative to operand size for ring algorithms."""
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", instr.attrs)
+    n = int(m.group(2)) if m else 2
+    if n <= 1:
+        return 0.0
+    frac = (n - 1) / n
+    if instr.opcode.startswith("all-reduce"):
+        return 2.0 * frac
+    if instr.opcode.startswith("collective-permute"):
+        return 1.0
+    return frac                       # all-gather / reduce-scatter / all-to-all
+
+
+class CostWalker:
+    def __init__(self, comps: Dict[str, List[Instr]]):
+        self.comps = comps
+        self.tables = {c: {i.name: i for i in instrs}
+                       for c, instrs in comps.items()}
+        self.memo: Dict[str, Cost] = {}
+        self._charge_memo: Dict[str, Dict[int, float]] = {}
+        self._pure_convert: set = set()
+        self._normalize_converts()
+
+    def _normalize_converts(self) -> None:
+        """CPU-backend bf16 legalisation inserts whole-tensor widening
+        converts (bf16 weights/caches -> f32) that do not exist on the TPU
+        target, where bf16 is native.  Pure converts are made zero-cost and
+        their result size is clamped to the narrower width so downstream
+        consumers charge native-width reads.  Semantic converts fused with
+        real compute are unaffected."""
+        for comp, instrs in self.comps.items():
+            table = self.tables[comp]
+            # fusion wrappers whose callee is only {parameter, convert,
+            # bitcast, copy} are pure converts too (wrapped_convert.*)
+            for ins in instrs:
+                target = None
+                if ins.opcode == "convert":
+                    target = ins
+                elif ins.opcode == "fusion":
+                    m = re.search(r"calls=%([\w\.\-]+)", ins.attrs)
+                    callee = self.comps.get(m.group(1)) if m else None
+                    if callee is not None and all(
+                            c.opcode in ("parameter", "convert", "bitcast",
+                                         "copy") for c in callee):
+                        target = ins
+                if target is None:
+                    continue
+                src = table.get(target.operands[0]) if target.operands \
+                    else None
+                if src is not None:
+                    target.result_bytes = min(target.result_bytes,
+                                              src.result_bytes)
+                self._pure_convert.add((comp, target.name))
+
+    def _operand_bytes(self, comp: str, names: List[str]) -> float:
+        table = self.tables[comp]
+        total = 0.0
+        for n in names:
+            ins = table.get(n)
+            if ins is not None:
+                total += ins.result_bytes
+        return total
+
+    def _callee_has_dus(self, callee: str) -> Optional[Instr]:
+        for ins in self.comps.get(callee, []):
+            if ins.opcode == "dynamic-update-slice":
+                return ins
+        return None
+
+    def _fusion_param_charges(self, callee: str) -> Dict[int, float]:
+        """HBM bytes actually touched per fusion parameter.
+
+        A parameter consumed ONLY by fused dynamic-slice ops reads just the
+        slices; a parameter that is only the target buffer of fused
+        dynamic-update-slices is written in place (charge the update).
+        Everything else streams in full.  Returns {param_index: bytes} for
+        the special cases; absent indices are charged at full size.
+        """
+        if callee in self._charge_memo:
+            return self._charge_memo[callee]
+        charges: Dict[int, float] = {}
+        instrs = self.comps.get(callee, [])
+        table = self.tables.get(callee, {})
+        for p in instrs:
+            if p.opcode != "parameter":
+                continue
+            try:
+                idx = int(p.inner.strip())
+            except ValueError:
+                continue
+            # transitive consumers: unary convert/bitcast/copy forward the
+            # buffer (CPU bf16-legalisation wraps caches in converts; on the
+            # TPU target those are identity)
+            def effective_consumers(name, depth=0):
+                out = []
+                if depth > 4:
+                    return [None]
+                for c in instrs:
+                    if name not in c.operands:
+                        continue
+                    if c.opcode in ("convert", "bitcast", "copy") \
+                            and len(c.operands) == 1:
+                        out.extend(effective_consumers(c.name, depth + 1))
+                    else:
+                        out.append((c, name))
+                return out
+
+            consumers = effective_consumers(p.name)
+            if not consumers:
+                charges[idx] = 0.0
+                continue
+            # sparse-access accounting: a param consumed only through
+            # dynamic-slice reads and/or in-place dynamic-update-slice
+            # writes touches just the slices, not the whole buffer
+            total, sparse = 0.0, True
+            for entry in consumers:
+                if entry is None:
+                    sparse = False
+                    break
+                c, via = entry
+                if c.opcode == "dynamic-slice":
+                    total += c.result_bytes
+                elif (c.opcode == "dynamic-update-slice" and c.operands
+                      and c.operands[0] == via):
+                    if len(c.operands) >= 2 and c.operands[1] in table:
+                        total += 2 * table[c.operands[1]].result_bytes
+                    else:
+                        sparse = False
+                        break
+                else:
+                    sparse = False
+                    break
+            if sparse:
+                charges[idx] = total
+        self._charge_memo[callee] = charges
+        return charges
+
+    def cost(self, comp: str) -> Cost:
+        if comp in self.memo:
+            return self.memo[comp]
+        total = Cost()
+        self.memo[comp] = total        # recursion guard
+        table = self.tables[comp]
+        for ins in self.comps.get(comp, []):
+            op = ins.opcode
+            base = op.replace("-start", "")
+            if op in SKIP_OPS or op.endswith("-done"):
+                continue
+            if (comp, ins.name) in self._pure_convert:
+                continue          # backend dtype legalisation: free on TPU
+            if base.startswith(COLLECTIVES):
+                ob = self._operand_bytes(comp, ins.operands)
+                total.bytes += ob + ins.result_bytes
+                total.coll_bytes += ob
+                total.coll_wire_bytes += ob * _ring_factor(ins)
+                key = base.split(".")[0]
+                total.coll_ops[key] = total.coll_ops.get(key, 0.0) + ob
+                total.coll_count += 1
+                continue
+            if op == "dot":
+                total.flops += _dot_flops(ins, table)
+                total.bytes += self._operand_bytes(comp, ins.operands) \
+                    + ins.result_bytes
+                continue
+            if op == "fusion":
+                m = re.search(r"calls=%([\w\.\-]+)", ins.attrs)
+                callee = m.group(1) if m else None
+                charges = self._fusion_param_charges(callee) if callee else {}
+                dus = self._callee_has_dus(callee) if callee else None
+                for idx, opname in enumerate(ins.operands):
+                    if idx in charges:
+                        total.bytes += charges[idx]
+                    else:
+                        src = table.get(opname)
+                        if src is not None:
+                            total.bytes += src.result_bytes
+                if dus is not None:
+                    # result aliases the updated buffer: the write was
+                    # charged via the param; nothing extra for the result
+                    t = self.tables.get(callee, {})
+                    if len(dus.operands) >= 2 and dus.operands[1] in t:
+                        total.bytes += t[dus.operands[1]].result_bytes
+                else:
+                    total.bytes += ins.result_bytes
+                if callee:
+                    sub = self.cost(callee)
+                    total.flops += sub.flops
+                    total.coll_bytes += sub.coll_bytes
+                    total.coll_wire_bytes += sub.coll_wire_bytes
+                    total.coll_count += sub.coll_count
+                    for k, v in sub.coll_ops.items():
+                        total.coll_ops[k] = total.coll_ops.get(k, 0.0) + v
+                continue
+            if op == "while":
+                mtc = re.search(r'"known_trip_count":\{"n":"(\d+)"\}',
+                                ins.attrs)
+                n = int(mtc.group(1)) if mtc else None
+                mb = re.search(r"body=%([\w\.\-]+)", ins.attrs)
+                mc = re.search(r"condition=%([\w\.\-]+)", ins.attrs)
+                if n is None and mc:
+                    n = self._trip_from_condition(mc.group(1))
+                if n is None:
+                    n = 1
+                    total.unknown_trip_counts += 1
+                if mb:
+                    total.add(self.cost(mb.group(1)), n)
+                if mc:
+                    total.add(self.cost(mc.group(1)), n)
+                continue
+            if op == "conditional":
+                branches = re.findall(r"branch_computations=\{([^}]*)\}",
+                                      ins.attrs)
+                names = re.findall(r"%([\w\.\-]+)",
+                                   branches[0]) if branches else []
+                names += re.findall(r"(?:true|false)_computation=%([\w\.\-]+)",
+                                    ins.attrs)
+                if names:
+                    worst = max((self.cost(nm) for nm in names),
+                                key=lambda c: c.flops + c.bytes)
+                    total.add(worst)
+                continue
+            if op == "call":
+                m = re.search(r"to_apply=%([\w\.\-]+)", ins.attrs)
+                if m:
+                    total.add(self.cost(m.group(1)))
+                continue
+            if op == "dynamic-update-slice":
+                t = self.tables[comp]
+                upd = (t[ins.operands[1]].result_bytes
+                       if len(ins.operands) >= 2 and ins.operands[1] in t
+                       else ins.result_bytes)
+                total.bytes += 2 * upd
+                continue
+            if op in ("dynamic-slice", "gather"):
+                total.bytes += 2 * ins.result_bytes
+                continue
+            if op == "scatter":
+                # scatter(buf, idx, upd): in-place, touch ~2x update size
+                t = self.tables[comp]
+                upd = (t[ins.operands[2]].result_bytes
+                       if len(ins.operands) >= 3 and ins.operands[2] in t
+                       else ins.result_bytes)
+                total.bytes += 2 * upd
+                continue
+            if op in ("convolution",):
+                # treat like a dot over the kernel: rare here
+                total.flops += 2 * ins.result_bytes
+                total.bytes += self._operand_bytes(comp, ins.operands) \
+                    + ins.result_bytes
+                continue
+            # generic elementwise / data movement
+            total.bytes += self._operand_bytes(comp, ins.operands) \
+                + ins.result_bytes
+        self.memo[comp] = total
+        return total
+
+    def _trip_from_condition(self, cond: str) -> Optional[int]:
+        consts = []
+        for ins in self.comps.get(cond, []):
+            if ins.opcode == "constant":
+                m = re.search(r"constant\((\d+)\)", ins.attrs or "")
+                if m:
+                    consts.append(int(m.group(1)))
+        # also scan raw: constants may appear as operands text; best effort
+        return max(consts) if consts else None
+
+
+def pod_crossing_bytes(text: str, pod_size: int = 256) -> float:
+    """Sum of collective operand bytes whose replica groups cross a pod
+    boundary (device id // pod_size differs within a group) — the traffic
+    that rides the slow DCN instead of ICI.  Trip counts are NOT applied
+    (callers usually want per-occurrence totals scaled by the walker);
+    here we approximate by scanning def lines once and multiplying nested
+    collectives by enclosing known_trip_counts is skipped — collectives on
+    the pod axis sit outside layer loops in every step we emit."""
+    import numpy as np
+
+    comps, entry = parse_module(text)
+    tables = {c: {i.name: i for i in instrs} for c, instrs in comps.items()}
+    total = 0.0
+    for cname, instrs in comps.items():
+        table = tables[cname]
+        for ins in instrs:
+            base = ins.opcode.replace("-start", "")
+            if not base.startswith(COLLECTIVES):
+                continue
+            crossing = False
+            if base.startswith("collective-permute"):
+                pairs = re.findall(r"\{(\d+),(\d+)\}", ins.attrs)
+                crossing = any(int(a) // pod_size != int(b) // pod_size
+                               for a, b in pairs)
+            else:
+                m = re.search(
+                    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?",
+                    ins.attrs)
+                if m:
+                    g, s = int(m.group(1)), int(m.group(2))
+                    dims = [int(x) for x in m.group(3).split(",")]
+                    ids = np.arange(int(np.prod(dims)))
+                    if m.group(4):
+                        perm = [int(x) for x in m.group(4).split(",")]
+                        ids = ids.reshape(dims).transpose(perm).reshape(-1)
+                    groups = ids.reshape(g, s)
+                    crossing = bool(
+                        ((groups // pod_size).max(1)
+                         != (groups // pod_size).min(1)).any())
+                else:
+                    m2 = re.search(r"replica_groups=\{\{([^}]*)\}", ins.attrs)
+                    if m2:
+                        first = [int(x) for x in m2.group(1).split(",") if x]
+                        crossing = len({i // pod_size for i in first}) > 1
+            if crossing:
+                for o in ins.operands:
+                    if o in table:
+                        total += table[o].result_bytes
+    return total
+
+
+def analyze_hlo_text(text: str, pod_size: Optional[int] = None
+                     ) -> Dict[str, Any]:
+    comps, entry = parse_module(text)
+    walker = CostWalker(comps)
+    c = walker.cost(entry)
+    out = {
+        "flops_per_device": c.flops,
+        "bytes_per_device": c.bytes,
+        "collective_bytes_per_device": c.coll_bytes,
+        "collective_wire_bytes_per_device": c.coll_wire_bytes,
+        "collective_ops": c.coll_ops,
+        "collective_count": c.coll_count,
+        "unknown_trip_counts": c.unknown_trip_counts,
+    }
+    if pod_size:
+        out["pod_crossing_bytes_per_device"] = pod_crossing_bytes(text,
+                                                                  pod_size)
+    return out
+
+
+def roofline_terms(analysis: Dict[str, Any], model_flops_global: float,
+                   chips: int, inter_pod: bool = False,
+                   dcn_bw: float = 25e9) -> Dict[str, Any]:
+    link_bw = dcn_bw if inter_pod else ICI_BW
+    compute_s = analysis["flops_per_device"] / PEAK_FLOPS
+    memory_s = analysis["bytes_per_device"] / HBM_BW
+    coll_s = analysis["collective_bytes_per_device"] / link_bw
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    model_flops_per_device = model_flops_global / chips
+    achievable = model_flops_per_device / max(step_s, 1e-30)
+    return {
+        **terms,
+        "dominant": dominant,
+        "bound_step_s": step_s,
+        "model_flops_global": model_flops_global,
+        "hlo_flops_global": analysis["flops_per_device"] * chips,
+        "useful_flops_ratio": model_flops_per_device
+        / max(analysis["flops_per_device"], 1e-30),
+        "roofline_fraction": achievable / PEAK_FLOPS,
+        "achievable_flops_per_chip": achievable,
+    }

@@ -1,0 +1,198 @@
+"""Serving: sessions are Enoki keygroups.
+
+A decode session's KV cache (or recurrent state) is a keygroup whose home is
+the pod serving it — the decode hot path touches only pod-local state, the
+paper's core property.  Three jitted programs:
+
+  prefill_step              builds a session from a prompt (logits + cache)
+  decode_step               one token for every local session; NO pod-axis
+                            collectives (structurally verified in dry-run)
+  replicate_sessions_step   anti-entropy: ring-copy session state to the
+                            next pod (ppermute over 'pod') into a backup
+                            buffer — pod failure loses ≤R tokens of session
+                            state (R = replication_period), the serving
+                            analogue of the paper's measured staleness
+  migrate_sessions_step     §2's deploy-time keygroup replication: adopt the
+                            backup copy as live state (after failover the
+                            surviving pod serves the lost pod's sessions)
+
+Multi-pod shapes are pod-stacked (leading n_pods dim, sharded P("pod",...)),
+like training keygroups in launch/train.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (ArchConfig, AttnImpl, EnokiConfig,
+                                ParallelConfig, ShapeConfig)
+from repro.models import model_zoo as zoo
+from repro.parallel.sharding import (batch_specs, cache_partition_specs,
+                                     named, param_partition_specs)
+from repro.launch.train import stack_specs, stack_shapes
+
+
+def serve_param_dtype(arch: ArchConfig):
+    return jnp.bfloat16        # serving always runs bf16 weights
+
+
+def params_shape_tree(arch: ArchConfig):
+    return jax.eval_shape(
+        lambda: zoo.init_params(arch, jax.random.PRNGKey(0),
+                                dtype=serve_param_dtype(arch)))
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(arch: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                      parallel: Optional[ParallelConfig] = None,
+                      impl: AttnImpl = AttnImpl.REFERENCE):
+    parallel = parallel or ParallelConfig(remat="none", fsdp=False)
+    pshape = params_shape_tree(arch)
+    pspecs = param_partition_specs(pshape, arch, mesh, parallel)
+    bspecs = batch_specs(arch, shape, mesh, parallel)
+
+    def prefill(params, batch):
+        logits, _, cache = zoo.forward_seq(
+            arch, params, batch["tokens"], extra=batch, impl=impl,
+            return_cache=True, use_scan=parallel.use_scan,
+            mesh=mesh if parallel.moe_impl == "ep" else None,
+            moe_impl=parallel.moe_impl)
+        cache = dict(cache)
+        cache["length"] = jnp.asarray(shape.seq_len, jnp.int32)
+        return logits[:, -1:, :], cache
+
+    cache_shape = jax.eval_shape(
+        lambda: zoo.init_cache(arch, shape.global_batch, shape.seq_len))
+    cspecs = cache_partition_specs(cache_shape, arch, mesh,
+                                   shape.global_batch)
+    # prefill emits per-layer stacked caches with layout (L,B,S,KV,Dh) too
+    jitted = jax.jit(prefill,
+                     in_shardings=(named(mesh, pspecs), named(mesh, bspecs)),
+                     out_shardings=(None, named(mesh, cspecs)))
+    return jitted, pshape, (pspecs, bspecs, cspecs)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def make_decode_step(arch: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                     parallel: Optional[ParallelConfig] = None,
+                     enoki: Optional[EnokiConfig] = None,
+                     impl: AttnImpl = AttnImpl.REFERENCE,
+                     donate: bool = True):
+    """Returns (jitted, shapes dict, specs dict).  Multi-pod: pod-stacked."""
+    parallel = parallel or ParallelConfig(remat="none", fsdp=False)
+    enoki = enoki or EnokiConfig()
+    multi_pod = "pod" in mesh.shape
+    n_pods = mesh.shape.get("pod", 1)
+    batch_local = shape.global_batch // n_pods if multi_pod \
+        else shape.global_batch
+    if multi_pod and shape.global_batch % n_pods:
+        batch_local = max(1, batch_local)
+
+    pshape = params_shape_tree(arch)
+    pspecs = param_partition_specs(pshape, arch, mesh, parallel)
+    cache_shape = jax.eval_shape(
+        lambda: zoo.init_cache(arch, batch_local, shape.seq_len))
+    cspecs = cache_partition_specs(cache_shape, arch, mesh, batch_local,
+                                   prefer_seq=parallel.flash_decode)
+    tshape = jax.ShapeDtypeStruct((batch_local, 1), jnp.int32)
+    tspec = P("data" if batch_local % mesh.shape["data"] == 0
+              and batch_local >= mesh.shape["data"] else None, None)
+
+    def step(params, cache, token):
+        logits, new_cache = zoo.decode_step(
+            arch, params, cache, token, impl=impl,
+            use_scan=parallel.use_scan, mesh=mesh if parallel.flash_decode
+            and "pod" not in mesh.shape else None,
+            flash_decode=parallel.flash_decode)
+        next_token = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+        return next_token.astype(jnp.int32), new_cache
+
+    if not multi_pod:
+        jitted = jax.jit(step,
+                         in_shardings=(named(mesh, pspecs),
+                                       named(mesh, cspecs),
+                                       NamedSharding(mesh, tspec)),
+                         out_shardings=(None, named(mesh, cspecs)),
+                         donate_argnums=(1,) if donate else ())
+        return jitted, {"params": pshape, "cache": cache_shape,
+                        "token": tshape}, \
+            {"params": pspecs, "cache": cspecs, "token": tspec}
+
+    # pod-stacked serving (Enoki REPLICATED): vmap over the pod dim
+    spspecs = stack_specs(pspecs)
+    scspecs = stack_specs(cspecs)
+    stspec = P("pod", *tspec)
+    jitted = jax.jit(jax.vmap(step),
+                     in_shardings=(named(mesh, spspecs),
+                                   named(mesh, scspecs),
+                                   NamedSharding(mesh, stspec)),
+                     out_shardings=(None, named(mesh, scspecs)),
+                     donate_argnums=(1,) if donate else ())
+    shapes = {"params": stack_shapes(pshape, n_pods),
+              "cache": stack_shapes(cache_shape, n_pods),
+              "token": jax.ShapeDtypeStruct((n_pods,) + tuple(tshape.shape),
+                                            jnp.int32)}
+    return jitted, shapes, {"params": spspecs, "cache": scspecs,
+                            "token": stspec}
+
+
+# ---------------------------------------------------------------------------
+# Session anti-entropy / migration (multi-pod only)
+# ---------------------------------------------------------------------------
+
+def make_replicate_sessions_step(arch: ArchConfig, shape: ShapeConfig,
+                                 mesh: Mesh, enoki: Optional[EnokiConfig]
+                                 = None):
+    """backup <- ring-shifted copy of live session state (pod i backs up
+    pod i-1).  jnp.roll over the pod-sharded dim lowers to
+    collective-permute over the DCN — Enoki's replication traffic, off the
+    decode hot path, amortised over replication_period tokens."""
+    n_pods = mesh.shape.get("pod", 1)
+    batch_local = max(1, shape.global_batch // max(n_pods, 1))
+    cache_shape = jax.eval_shape(
+        lambda: zoo.init_cache(arch, batch_local, shape.seq_len))
+    cspecs = stack_specs(cache_partition_specs(cache_shape, arch, mesh,
+                                               batch_local))
+
+    def replicate(live):
+        return jax.tree.map(lambda c: jnp.roll(c, 1, axis=0), live)
+
+    jitted = jax.jit(replicate, in_shardings=(named(mesh, cspecs),),
+                     out_shardings=named(mesh, cspecs))
+    return jitted, stack_shapes(cache_shape, n_pods), cspecs
+
+
+def make_migrate_sessions_step(arch: ArchConfig, shape: ShapeConfig,
+                               mesh: Mesh):
+    """Failover: adopt the backup copy for pods flagged dead.
+    live' = where(dead[pod], backup, live) — keygroup restore from the
+    surviving replica (paper §2 / DESIGN.md §7)."""
+    n_pods = mesh.shape.get("pod", 1)
+    batch_local = max(1, shape.global_batch // max(n_pods, 1))
+    cache_shape = jax.eval_shape(
+        lambda: zoo.init_cache(arch, batch_local, shape.seq_len))
+    cspecs = stack_specs(cache_partition_specs(cache_shape, arch, mesh,
+                                               batch_local))
+
+    def migrate(live, backup, dead_mask):
+        def sel(l, b):
+            m = dead_mask.reshape((n_pods,) + (1,) * (l.ndim - 1))
+            return jnp.where(m, b, l)
+        return jax.tree.map(sel, live, backup)
+
+    jitted = jax.jit(
+        migrate,
+        in_shardings=(named(mesh, cspecs), named(mesh, cspecs),
+                      NamedSharding(mesh, P("pod"))),
+        out_shardings=named(mesh, cspecs))
+    return jitted, stack_shapes(cache_shape, n_pods), cspecs

@@ -1,0 +1,154 @@
+"""Shared neural-net building blocks (pure jnp, pytree params)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import Activation
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(dtype)
+
+
+def groupnorm_heads(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5):
+    """Per-head groupnorm over the feature dim.  x: (..., H, Dh)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, Dh); positions: (B, S) int32."""
+    if theta <= 0:
+        return x
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, Dh/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(max_len: int, dim: int) -> jnp.ndarray:
+    """Whisper-style absolute sinusoidal embeddings (max_len, dim)."""
+    pos = jnp.arange(max_len, dtype=jnp.float32)[:, None]
+    idx = jnp.arange(dim // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-jnp.log(10000.0) * idx / max(dim // 2 - 1, 1))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def _act(x: jnp.ndarray, kind: Activation) -> jnp.ndarray:
+    if kind == Activation.SWIGLU or kind == Activation.GEGLU:
+        raise ValueError("gated activations handled in gated_mlp")
+    if kind == Activation.GELU:
+        return jax.nn.gelu(x)
+    return jax.nn.relu(x)
+
+
+def gated_mlp(params: dict, x: jnp.ndarray, kind: Activation) -> jnp.ndarray:
+    """SwiGLU / GeGLU: down( act(x@gate) * (x@up) )."""
+    gate = x @ params["w_gate"]
+    up = x @ params["w_up"]
+    if kind == Activation.GEGLU:
+        h = jax.nn.gelu(gate) * up
+    else:
+        h = jax.nn.silu(gate) * up
+    return h @ params["w_down"]
+
+
+def plain_mlp(params: dict, x: jnp.ndarray, kind: Activation) -> jnp.ndarray:
+    h = x @ params["w_up"]
+    if "b_up" in params:
+        h = h + params["b_up"].astype(h.dtype)
+    h = _act(h, kind)
+    out = h @ params["w_down"]
+    if "b_down" in params:
+        out = out + params["b_down"].astype(out.dtype)
+    return out
+
+
+def mlp_apply(params: dict, x: jnp.ndarray, kind: Activation) -> jnp.ndarray:
+    if kind in (Activation.SWIGLU, Activation.GEGLU):
+        return gated_mlp(params, x, kind)
+    return plain_mlp(params, x, kind)
+
+
+# ---------------------------------------------------------------------------
+# Initialisers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    s = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+def mlp_init(key, d_model: int, d_ff: int, kind: Activation,
+             dtype=jnp.float32, bias: bool = False) -> dict:
+    ks = jax.random.split(key, 3)
+    if kind in (Activation.SWIGLU, Activation.GEGLU):
+        return {
+            "w_gate": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+            "w_up": dense_init(ks[1], (d_model, d_ff), dtype=dtype),
+            "w_down": dense_init(ks[2], (d_ff, d_model), dtype=dtype),
+        }
+    p = {
+        "w_up": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "w_down": dense_init(ks[1], (d_ff, d_model), dtype=dtype),
+    }
+    if bias:
+        p["b_up"] = jnp.zeros((d_ff,), dtype)
+        p["b_down"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean token cross-entropy.  logits (B,S,V) f32/bf16; labels (B,S) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

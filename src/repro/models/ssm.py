@@ -1,0 +1,232 @@
+"""Mamba-2 (SSD) block: chunked-parallel scan for sequence mode, O(1)
+recurrent state for decode — this is what makes zamba2 runnable at 500k
+context where full attention is excluded.
+
+Sequence mode implements the SSD chunked algorithm (intra-chunk quadratic +
+inter-chunk low-rank recurrence) in pure jnp; the Pallas kernel
+(kernels/ssd_chunk) replaces the intra-chunk part 1:1 on TPU.
+
+Projections are kept *separate* (w_z/w_x/w_B/w_C/w_dt rather than one fused
+in_proj) so the d_inner dim shards cleanly over the ``model`` axis while the
+small B/C/dt heads stay replicated.  Same FLOPs; fusing them back is a layout
+optimization XLA performs anyway.
+
+Conventions: n_groups=1 (B, C shared across heads), A scalar per head.
+    x          (B, S, D)
+    x_inner    (B, S, H, P)     P = head_dim, H = expand*D / P
+    B_, C_     (B, S, N)        N = state_dim
+    state      (B, H, P, N)
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.models.layers import dense_init, rmsnorm
+
+
+def ssm_dims(arch: ArchConfig) -> Tuple[int, int, int]:
+    cfg = arch.ssm
+    d_inner = cfg.expand * arch.d_model
+    n_heads = d_inner // cfg.head_dim
+    return d_inner, n_heads, cfg.state_dim
+
+
+def mamba2_init(key, arch: ArchConfig, dtype=jnp.float32) -> dict:
+    cfg = arch.ssm
+    d = arch.d_model
+    di, h, n = ssm_dims(arch)
+    ks = jax.random.split(key, 9)
+    return {
+        "w_z": dense_init(ks[0], (d, di), dtype=dtype),
+        "w_x": dense_init(ks[1], (d, di), dtype=dtype),
+        "w_B": dense_init(ks[2], (d, n), dtype=dtype),
+        "w_C": dense_init(ks[3], (d, n), dtype=dtype),
+        "w_dt": dense_init(ks[4], (d, h), dtype=dtype),
+        "conv_x": dense_init(ks[5], (cfg.conv_width, di), scale=0.5, dtype=dtype),
+        "conv_B": dense_init(ks[6], (cfg.conv_width, n), scale=0.5, dtype=dtype),
+        "conv_C": dense_init(ks[7], (cfg.conv_width, n), scale=0.5, dtype=dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),       # A = -exp(A_log) = -1
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),  # softplus(-2) ≈ 0.13
+        "norm": jnp.zeros((di,), dtype),
+        "w_out": dense_init(ks[8], (di, d), dtype=dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (width W) as shifted adds — TPU-friendly, no conv op
+# ---------------------------------------------------------------------------
+
+def causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x (B,S,C), w (W,C): y[t] = Σ_i w[i]·x[t-W+1+i]."""
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    y = jnp.zeros_like(x)
+    for i in range(W):
+        y = y + pad[:, i:i + x.shape[1], :] * w[i]
+    return y
+
+
+def conv_step(x1: jnp.ndarray, conv_state: jnp.ndarray, w: jnp.ndarray
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token conv.  x1 (B,C); conv_state (B,W-1,C) holds prior inputs."""
+    window = jnp.concatenate([conv_state, x1[:, None, :]], axis=1)  # (B,W,C)
+    y = jnp.einsum("bwc,wc->bc", window, w)
+    return y, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan (sequence mode)
+# ---------------------------------------------------------------------------
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a (..., L) -> (..., L, L) with out[i,j] = Σ_{k=j+1..i} a[k], -inf above
+    the diagonal."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_scan(x: jnp.ndarray, a_dt: jnp.ndarray, B_: jnp.ndarray,
+             C_: jnp.ndarray, dt: jnp.ndarray, chunk: int,
+             init_state: jnp.ndarray = None
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD.  x (B,S,H,P); a_dt (B,S,H) = A·dt (negative);
+    B_/C_ (B,S,N); dt (B,S,H).  Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bb, S, H, P = x.shape
+    N = B_.shape[-1]
+    chunk = min(chunk, S)
+    while S % chunk:                 # largest divisor of S <= chunk
+        chunk -= 1
+    nc = S // chunk
+    xc = x.reshape(Bb, nc, chunk, H, P)
+    ac = a_dt.reshape(Bb, nc, chunk, H).transpose(0, 3, 1, 2)   # (B,H,c,l)
+    Bc = B_.reshape(Bb, nc, chunk, N)
+    Cc = C_.reshape(Bb, nc, chunk, N)
+    dtc = dt.reshape(Bb, nc, chunk, H)
+    xdt = xc * dtc[..., None]                                    # dt-weighted input
+
+    # intra-chunk (quadratic in chunk length)
+    L = jnp.exp(_segsum(ac))                                     # (B,H,c,l,l)
+    scores = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)               # (B,c,l,s)
+    y_diag = jnp.einsum("bcls,bhcls,bcshp->bclhp", scores, L, xdt)
+
+    # per-chunk final states
+    a_cum = jnp.cumsum(ac, axis=-1)                              # (B,H,c,l)
+    decay_to_end = jnp.exp(a_cum[..., -1:] - a_cum)              # (B,H,c,l)
+    chunk_states = jnp.einsum("bcsn,bhcs,bcshp->bchpn", Bc, decay_to_end, xdt)
+
+    # inter-chunk recurrence over c
+    chunk_decay = jnp.exp(a_cum[..., -1])                        # (B,H,c)
+    if init_state is None:
+        init_state = jnp.zeros((Bb, H, P, N), jnp.float32)
+
+    def step(state, xs):
+        dec, new = xs                                            # (B,H), (B,H,P,N)
+        prev = state
+        state = state * dec[..., None, None] + new
+        return state, prev
+
+    states_seq = (chunk_decay.transpose(2, 0, 1),
+                  chunk_states.transpose(1, 0, 2, 3, 4))
+    final_state, prev_states = jax.lax.scan(step, init_state, states_seq)
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)           # (B,c,H,P,N)
+
+    # inter-chunk contribution to outputs
+    state_decay = jnp.exp(a_cum)                                 # (B,H,c,l)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(Bb, S, H, P)
+    return y, final_state
+
+
+def ssd_step(x1: jnp.ndarray, a_dt1: jnp.ndarray, B1: jnp.ndarray,
+             C1: jnp.ndarray, dt1: jnp.ndarray, state: jnp.ndarray
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One recurrent step.  x1 (B,H,P); a_dt1/dt1 (B,H); B1/C1 (B,N);
+    state (B,H,P,N)."""
+    decay = jnp.exp(a_dt1)[..., None, None]                      # (B,H,1,1)
+    inject = jnp.einsum("bhp,bn->bhpn", x1 * dt1[..., None], B1)
+    state = state * decay + inject
+    y = jnp.einsum("bhpn,bn->bhp", state, C1)
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# Full block (sequence + decode modes)
+# ---------------------------------------------------------------------------
+
+def mamba2_seq(params: dict, x: jnp.ndarray, arch: ArchConfig,
+               return_state: bool = False):
+    cfg = arch.ssm
+    di, h, n = ssm_dims(arch)
+    Bb, S, _ = x.shape
+    z = x @ params["w_z"]
+    x_pre = x @ params["w_x"]
+    b_pre = x @ params["w_B"]
+    c_pre = x @ params["w_C"]
+    xi = jax.nn.silu(causal_conv(x_pre, params["conv_x"]))
+    B_ = jax.nn.silu(causal_conv(b_pre, params["conv_B"]))
+    C_ = jax.nn.silu(causal_conv(c_pre, params["conv_C"]))
+    dt = jax.nn.softplus((x @ params["w_dt"]).astype(jnp.float32)
+                         + params["dt_bias"])                    # (B,S,H)
+    a = -jnp.exp(params["A_log"])                                # (H,)
+    xi_h = xi.reshape(Bb, S, h, cfg.head_dim).astype(jnp.float32)
+    y, final_state = ssd_scan(xi_h, a * dt, B_.astype(jnp.float32),
+                              C_.astype(jnp.float32), dt, cfg.chunk_size)
+    y = y + xi_h * params["D"][:, None]
+    y = y.reshape(Bb, S, di).astype(x.dtype)
+    y = rmsnorm(y, params["norm"]) * jax.nn.silu(z)
+    out = y @ params["w_out"]
+    if not return_state:
+        return out
+    w = cfg.conv_width - 1
+    cache = {"conv_x": x_pre[:, -w:, :], "conv_B": b_pre[:, -w:, :],
+             "conv_C": c_pre[:, -w:, :],
+             "state": final_state.astype(jnp.float32)}
+    return out, cache
+
+
+def mamba2_cache_init(arch: ArchConfig, batch: int, dtype=jnp.float32) -> dict:
+    cfg = arch.ssm
+    di, h, n = ssm_dims(arch)
+    w = cfg.conv_width - 1
+    return {
+        "conv_x": jnp.zeros((batch, w, di), dtype),
+        "conv_B": jnp.zeros((batch, w, n), dtype),
+        "conv_C": jnp.zeros((batch, w, n), dtype),
+        "state": jnp.zeros((batch, h, cfg.head_dim, n), jnp.float32),
+    }
+
+
+def mamba2_decode(params: dict, x1: jnp.ndarray, cache: dict,
+                  arch: ArchConfig) -> Tuple[jnp.ndarray, dict]:
+    """x1 (B, 1, D) -> (y (B, 1, D), cache')."""
+    cfg = arch.ssm
+    di, h, n = ssm_dims(arch)
+    xq = x1[:, 0, :]
+    z = xq @ params["w_z"]
+    xi, conv_x = conv_step(xq @ params["w_x"], cache["conv_x"], params["conv_x"])
+    xi = jax.nn.silu(xi)
+    B_, conv_B = conv_step(xq @ params["w_B"], cache["conv_B"], params["conv_B"])
+    C_, conv_C = conv_step(xq @ params["w_C"], cache["conv_C"], params["conv_C"])
+    B_, C_ = jax.nn.silu(B_), jax.nn.silu(C_)
+    dt = jax.nn.softplus((xq @ params["w_dt"]).astype(jnp.float32)
+                         + params["dt_bias"])                    # (B,H)
+    a = -jnp.exp(params["A_log"])
+    xi_h = xi.reshape(-1, h, cfg.head_dim).astype(jnp.float32)
+    y, state = ssd_step(xi_h, a * dt, B_.astype(jnp.float32),
+                        C_.astype(jnp.float32), dt, cache["state"])
+    y = y + xi_h * params["D"][:, None]
+    y = y.reshape(-1, di).astype(x1.dtype)
+    y = rmsnorm(y, params["norm"]) * jax.nn.silu(z)
+    y = y @ params["w_out"]
+    return y[:, None, :], {"conv_x": conv_x, "conv_B": conv_B,
+                           "conv_C": conv_C, "state": state}

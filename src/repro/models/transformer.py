@@ -1,0 +1,659 @@
+"""Layer-stack orchestrator for every assigned architecture.
+
+A model is a sequence of *segments*; each segment is a homogeneous run of
+layers whose parameters are stacked on a leading axis and executed with
+``lax.scan`` (keeps the HLO size independent of depth — essential for the
+80-layer dry-runs).  Heterogeneous stacks (zamba2's shared-attention groups,
+xlstm's 7:1 mLSTM:sLSTM pattern) become nested scans over *groups*.
+
+Segment plans (family → structure):
+  dense / vlm        scan L × [attn + mlp]
+  moe                scan L × [attn + moe]
+  ssm (xlstm)        scan G × [scan 7 × mlstm; slstm]           (G=L/8)
+  hybrid (zamba2)    scan G × [scan 6 × mamba2; SHARED attn+mlp] (+ tail)
+  audio (whisper)    scan 4 × [enc attn + mlp]; scan 4 × [self + cross + mlp]
+
+Every block type implements both modes:
+  seq(params, x, positions)           -> y            (train / prefill)
+  decode(params, x1, cache, length)   -> y, cache'    (one token)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import Activation, ArchConfig, AttnImpl
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import (cross_entropy_loss, dense_init, mlp_apply,
+                                 mlp_init, rmsnorm, sinusoidal_positions)
+
+
+# ---------------------------------------------------------------------------
+# Plans
+# ---------------------------------------------------------------------------
+
+def plan(arch: ArchConfig) -> Dict[str, Any]:
+    """Static structure of the layer stack."""
+    if arch.family in ("dense", "vlm"):
+        return {"kind": "dense", "layers": arch.num_layers}
+    if arch.family == "moe":
+        return {"kind": "moe", "layers": arch.num_layers}
+    if arch.family == "ssm":        # xlstm
+        per = arch.xlstm.slstm_every
+        groups = max(1, arch.num_layers // per)
+        return {"kind": "xlstm", "groups": groups, "mlstm_per": per - 1}
+    if arch.family == "hybrid":     # zamba2
+        per = arch.shared_attn_every
+        groups = arch.num_layers // per
+        tail = arch.num_layers - groups * per
+        return {"kind": "zamba", "groups": groups, "mamba_per": per,
+                "tail": tail}
+    if arch.family == "audio":
+        return {"kind": "whisper", "enc": arch.encoder_layers,
+                "dec": arch.num_layers}
+    raise ValueError(arch.family)
+
+
+# ---------------------------------------------------------------------------
+# Per-block params
+# ---------------------------------------------------------------------------
+
+def _dense_layer_init(key, arch: ArchConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.zeros((arch.d_model,), dtype),
+        "attn": attn.attn_init(k1, arch, dtype=dtype),
+        "ln2": jnp.zeros((arch.d_model,), dtype),
+        "mlp": mlp_init(k2, arch.d_model, arch.d_ff, arch.activation,
+                        dtype=dtype),
+    }
+
+
+def _moe_layer_init(key, arch: ArchConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.zeros((arch.d_model,), dtype),
+        "attn": attn.attn_init(k1, arch, dtype=dtype),
+        "ln2": jnp.zeros((arch.d_model,), dtype),
+        "moe": moe_mod.moe_init(k2, arch, dtype=dtype),
+    }
+
+
+def _mamba_layer_init(key, arch: ArchConfig, dtype) -> dict:
+    return {
+        "ln": jnp.zeros((arch.d_model,), dtype),
+        "mamba": ssm_mod.mamba2_init(key, arch, dtype=dtype),
+    }
+
+
+def _whisper_enc_layer_init(key, arch: ArchConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.zeros((arch.d_model,), dtype),
+        "attn": attn.attn_init(k1, arch, dtype=dtype),
+        "ln2": jnp.zeros((arch.d_model,), dtype),
+        "mlp": mlp_init(k2, arch.d_model, arch.d_ff, arch.activation,
+                        dtype=dtype, bias=False),
+    }
+
+
+def _whisper_dec_layer_init(key, arch: ArchConfig, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.zeros((arch.d_model,), dtype),
+        "self_attn": attn.attn_init(k1, arch, dtype=dtype),
+        "ln_x": jnp.zeros((arch.d_model,), dtype),
+        "cross_attn": attn.attn_init(k2, arch, dtype=dtype),
+        "ln2": jnp.zeros((arch.d_model,), dtype),
+        "mlp": mlp_init(k3, arch.d_model, arch.d_ff, arch.activation,
+                        dtype=dtype, bias=False),
+    }
+
+
+def _stack_init(layer_init, key, n: int, arch: ArchConfig, dtype):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: layer_init(k, arch, dtype))(keys)
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+def init_params(arch: ArchConfig, key, dtype=jnp.float32) -> dict:
+    p = plan(arch)
+    ks = jax.random.split(key, 8)
+    params: dict = {
+        "embed": dense_init(ks[0], (arch.vocab_size, arch.d_model),
+                            scale=1.0, dtype=dtype),
+        "final_norm": jnp.zeros((arch.d_model,), dtype),
+    }
+    if not arch.tie_embeddings:
+        params["lm_head"] = dense_init(
+            ks[1], (arch.d_model, arch.vocab_size), dtype=dtype)
+
+    if p["kind"] == "dense":
+        params["blocks"] = _stack_init(_dense_layer_init, ks[2], p["layers"],
+                                       arch, dtype)
+    elif p["kind"] == "moe":
+        params["blocks"] = _stack_init(_moe_layer_init, ks[2], p["layers"],
+                                       arch, dtype)
+    elif p["kind"] == "xlstm":
+        def group_init(k, a, dt):
+            k1, k2 = jax.random.split(k)
+            return {
+                "mlstm": _stack_init(
+                    lambda kk, aa, dd: {
+                        "ln": jnp.zeros((aa.d_model,), dd),
+                        "cell": xlstm_mod.mlstm_init(kk, aa, dtype=dd)},
+                    k1, p["mlstm_per"], a, dt),
+                "slstm": {"ln": jnp.zeros((a.d_model,), dt),
+                          "cell": xlstm_mod.slstm_init(k2, a, dtype=dt)},
+            }
+        params["blocks"] = _stack_init(group_init, ks[2], p["groups"],
+                                       arch, dtype)
+    elif p["kind"] == "zamba":
+        params["blocks"] = _stack_init(
+            lambda k, a, dt: _stack_init(_mamba_layer_init, k, p["mamba_per"],
+                                         a, dt),
+            ks[2], p["groups"], arch, dtype)
+        if p["tail"]:
+            params["tail"] = _stack_init(_mamba_layer_init, ks[3], p["tail"],
+                                         arch, dtype)
+        params["shared"] = _dense_layer_init(ks[4], arch, dtype)  # ONE copy
+    elif p["kind"] == "whisper":
+        params["enc_blocks"] = _stack_init(_whisper_enc_layer_init, ks[2],
+                                           p["enc"], arch, dtype)
+        params["dec_blocks"] = _stack_init(_whisper_dec_layer_init, ks[3],
+                                           p["dec"], arch, dtype)
+        params["enc_norm"] = jnp.zeros((arch.d_model,), dtype)
+        # frontend stub adapter: frame embeddings -> d_model
+        params["frame_proj"] = dense_init(ks[5], (arch.d_model, arch.d_model),
+                                          dtype=dtype)
+    if arch.frontend_stub == "clip_patches":
+        params["patch_proj"] = dense_init(ks[6], (arch.d_model, arch.d_model),
+                                          dtype=dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Block apply (sequence mode)
+# ---------------------------------------------------------------------------
+
+def _dense_block_seq(lp, x, positions, arch, impl, window=0, causal=True):
+    x = x + attn.self_attention(lp["attn"], rmsnorm(x, lp["ln1"]), positions,
+                                arch, causal=causal, window=window, impl=impl)
+    x = x + mlp_apply(lp["mlp"], rmsnorm(x, lp["ln2"]), arch.activation)
+    return x
+
+
+def _moe_block_seq(lp, x, positions, arch, impl, mesh=None,
+                   moe_impl="auto"):
+    x = x + attn.self_attention(lp["attn"], rmsnorm(x, lp["ln1"]), positions,
+                                arch, impl=impl)
+    xn = rmsnorm(x, lp["ln2"])
+    B, S, _ = xn.shape
+    ep_ok = (mesh is not None
+             and arch.moe.num_experts % mesh.shape["model"] == 0
+             and (B * S) % mesh.shape["data"] == 0)
+    if moe_impl == "ep" and ep_ok:
+        y, aux = moe_mod.moe_apply_ep(lp["moe"], xn, arch, mesh)
+    else:
+        y, aux = moe_mod.moe_apply(lp["moe"], xn, arch)
+    return x + y, aux
+
+
+def _remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "block":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _scan(body, carry, xs, use_scan: bool = True):
+    """lax.scan or an unrolled python loop over stacked xs (identical
+    semantics).  The unrolled form exists for the roofline depth probes:
+    XLA cost_analysis counts a while body once, so per-layer costs are
+    extracted from small unrolled builds (launch/roofline.py)."""
+    if use_scan:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    stacked = jax.tree.map(lambda *zs: jnp.stack(zs), *ys) if ys else None
+    return carry, stacked
+
+
+# ---------------------------------------------------------------------------
+# Sequence forward (train / prefill).  Returns (logits, aux_loss, cache|None)
+# ---------------------------------------------------------------------------
+
+def forward_seq(arch: ArchConfig, params: dict, tokens: jnp.ndarray,
+                positions: Optional[jnp.ndarray] = None,
+                extra: Optional[dict] = None,
+                impl: AttnImpl = AttnImpl.REFERENCE,
+                remat: str = "none",
+                return_cache: bool = False,
+                use_scan: bool = True,
+                mesh=None, moe_impl: str = "auto",
+                compute_dtype=jnp.bfloat16):
+    p = plan(arch)
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
+    x = x * jnp.asarray(arch.d_model ** 0.5, compute_dtype)
+
+    if arch.frontend_stub == "clip_patches":
+        patches = extra["patch_embeds"].astype(compute_dtype) @ \
+            params["patch_proj"].astype(compute_dtype)
+        x = jnp.concatenate([patches, x[:, :S - arch.num_patches]], axis=1)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    cache = {} if return_cache else None
+    cast = lambda t: jax.tree.map(lambda a: a.astype(compute_dtype)
+                                  if a.dtype == jnp.float32 and a.ndim > 1
+                                  else a, t)
+
+    if p["kind"] == "whisper":
+        x, cache, aux_total = _whisper_seq(arch, params, x, positions, extra,
+                                           impl, remat, return_cache,
+                                           use_scan, compute_dtype)
+    elif p["kind"] == "dense":
+        def body(x, lp):
+            lp = cast(lp)
+            y = _dense_block_seq(lp, x, positions, arch, impl)
+            c = _layer_kv(lp, x, positions, arch) if return_cache else 0
+            return y, c
+        x, kv = _scan(_remat(body, remat), x, params["blocks"], use_scan)
+        if return_cache:
+            cache["k"], cache["v"] = kv
+    elif p["kind"] == "moe":
+        def body(x, lp):
+            lp = cast(lp)
+            y, aux = _moe_block_seq(lp, x, positions, arch, impl, mesh,
+                                    moe_impl)
+            c = _layer_kv(lp, x, positions, arch) if return_cache else 0
+            return y, (aux, c)
+        x, (auxs, kv) = _scan(_remat(body, remat), x, params["blocks"], use_scan)
+        aux_total = aux_total + auxs.sum()
+        if return_cache:
+            cache["k"], cache["v"] = kv
+    elif p["kind"] == "xlstm":
+        def group(x, gp):
+            gp = cast(gp)
+            def mbody(x, lp):
+                y = xlstm_mod.mlstm_seq(lp["cell"], rmsnorm(x, lp["ln"]),
+                                        arch, return_state=return_cache)
+                if return_cache:
+                    y, mc = y
+                    return x + y, mc
+                return x + y, 0
+            x, mcs = _scan(_remat(mbody, remat), x, gp["mlstm"], use_scan)
+            y = xlstm_mod.slstm_seq(gp["slstm"]["cell"],
+                                    rmsnorm(x, gp["slstm"]["ln"]), arch,
+                                    return_state=return_cache)
+            if return_cache:
+                y, sc = y
+                return x + y, (mcs, sc)
+            return x + y, 0
+        x, gcs = _scan(group, x, params["blocks"], use_scan)
+        if return_cache:
+            cache["mlstm"], cache["slstm"] = gcs
+    elif p["kind"] == "zamba":
+        shared = cast(params["shared"])
+        win = arch.sliding_window if 0 < arch.sliding_window < S else S
+
+        def mamba_body(x, lp):
+            y = ssm_mod.mamba2_seq(lp["mamba"], rmsnorm(x, lp["ln"]), arch,
+                                   return_state=return_cache)
+            if return_cache:
+                y, mc = y
+                return x + y, mc
+            return x + y, 0
+
+        def group(x, gp):
+            gp = cast(gp)
+            x, mcs = _scan(_remat(mamba_body, remat), x, gp, use_scan)
+            x_pre = x
+            x = _dense_block_seq(shared, x, positions, arch, impl,
+                                 window=arch.sliding_window)
+            if return_cache:
+                k, v = _layer_kv(shared, x_pre, positions, arch)
+                # ring layout: position p -> slot p % win; the last `win`
+                # positions land on slots (S-win+i) % win == i when win | S
+                c = (mcs, k[:, -win:], v[:, -win:])
+            else:
+                c = 0
+            return x, c
+        x, kv = _scan(group, x, params["blocks"], use_scan)
+        if return_cache:
+            mcs, k, v = kv
+            cache["mamba"] = mcs
+            cache["shared_k"], cache["shared_v"] = k, v
+            G = k.shape[0]
+            pos = jnp.broadcast_to(
+                jnp.arange(S - win, S, dtype=jnp.int32),
+                (G, k.shape[1], win))
+            cache["shared_pos"] = pos
+        if p["tail"]:
+            def tbody(x, lp):
+                lp = cast(lp)
+                return mamba_body(x, lp)
+            x, tcs = _scan(_remat(tbody, remat), x, params["tail"], use_scan)
+            if return_cache:
+                cache["tail"] = tcs
+
+    x = rmsnorm(x, params["final_norm"])
+    head = (params["embed"].T if arch.tie_embeddings else params["lm_head"])
+    logits = x @ head.astype(compute_dtype)
+    return logits, aux_total, cache
+
+
+def _layer_kv(lp, x_in, positions, arch):
+    """Recompute this layer's K/V for the prefill cache (cheap vs attention)."""
+    xn = rmsnorm(x_in, lp["ln1"])
+    dh = arch.resolved_head_dim
+    B, S = xn.shape[:2]
+    k = (xn @ lp["attn"]["wk"]).reshape(B, S, arch.num_kv_heads, dh)
+    v = (xn @ lp["attn"]["wv"]).reshape(B, S, arch.num_kv_heads, dh)
+    if "bk" in lp["attn"]:
+        k = k + lp["attn"]["bk"].reshape(arch.num_kv_heads, dh).astype(k.dtype)
+        v = v + lp["attn"]["bv"].reshape(arch.num_kv_heads, dh).astype(v.dtype)
+    if arch.rope_theta > 0:
+        k = attn.apply_rope(k, positions, arch.rope_theta)
+    return k, v
+
+
+def _whisper_seq(arch, params, x, positions, extra, impl, remat,
+                 return_cache, use_scan, compute_dtype):
+    """Encoder over frame embeddings, decoder over tokens.  x is the decoder
+    token embedding; extra['frame_embeds'] is (B, F, D) from the stub."""
+    cast = lambda t: jax.tree.map(lambda a: a.astype(compute_dtype)
+                                  if a.dtype == jnp.float32 and a.ndim > 1
+                                  else a, t)
+    frames = extra["frame_embeds"].astype(compute_dtype)
+    frames = frames @ params["frame_proj"].astype(compute_dtype)
+    F = frames.shape[1]
+    frames = frames + sinusoidal_positions(F, arch.d_model).astype(compute_dtype)
+    enc_pos = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32),
+                               (frames.shape[0], F))
+
+    def enc_body(h, lp):
+        lp = cast(lp)
+        h = _dense_block_seq(lp, h, enc_pos, arch, impl, causal=False)
+        return h, 0
+    enc, _ = _scan(_remat(enc_body, remat), frames, params["enc_blocks"],
+                   use_scan)
+    enc = rmsnorm(enc, params["enc_norm"])
+
+    S = x.shape[1]
+    x = x + sinusoidal_positions(S, arch.d_model).astype(compute_dtype)
+
+    def dec_body(h, lp):
+        lp = cast(lp)
+        h_pre = h
+        h = h + attn.self_attention(lp["self_attn"], rmsnorm(h, lp["ln1"]),
+                                    positions, arch, causal=True, impl=impl)
+        ck, cv = attn.project_cross_kv(lp["cross_attn"], enc, arch)
+        h = h + attn.cross_attention(lp["cross_attn"], rmsnorm(h, lp["ln_x"]),
+                                     ck, cv, arch)
+        h = h + mlp_apply(lp["mlp"], rmsnorm(h, lp["ln2"]), arch.activation)
+        c = ((_layer_kv_whisper(lp, h_pre, positions, arch), (ck, cv))
+             if return_cache else 0)
+        return h, c
+    x, kv = _scan(_remat(dec_body, remat), x, params["dec_blocks"], use_scan)
+    cache = {}
+    if return_cache:
+        (sk, sv), (ck, cv) = kv
+        cache = {"self_k": sk, "self_v": sv, "cross_k": ck, "cross_v": cv}
+    return x, cache, jnp.zeros((), jnp.float32)
+
+
+def _layer_kv_whisper(lp, x_in, positions, arch):
+    xn = rmsnorm(x_in, lp["ln1"])
+    dh = arch.resolved_head_dim
+    B, S = xn.shape[:2]
+    k = (xn @ lp["self_attn"]["wk"]).reshape(B, S, arch.num_kv_heads, dh)
+    v = (xn @ lp["self_attn"]["wv"]).reshape(B, S, arch.num_kv_heads, dh)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def init_cache(arch: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    p = plan(arch)
+    dh = arch.resolved_head_dim
+    kv = arch.num_kv_heads
+
+    def kv_pair(n, length):
+        shape = (n, batch, length, kv, dh)
+        return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+    if p["kind"] in ("dense", "moe"):
+        k, v = kv_pair(p["layers"], max_len)
+        return {"k": k, "v": v, "length": jnp.zeros((), jnp.int32)}
+    if p["kind"] == "xlstm":
+        g, m = p["groups"], p["mlstm_per"]
+        stack = lambda n, tree: jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape), tree)
+        return {
+            "mlstm": stack(g, stack(m, xlstm_mod.mlstm_cache_init(
+                arch, batch, dtype))),
+            "slstm": stack(g, xlstm_mod.slstm_cache_init(arch, batch, dtype)),
+            "length": jnp.zeros((), jnp.int32),
+        }
+    if p["kind"] == "zamba":
+        g, m = p["groups"], p["mamba_per"]
+        stack = lambda n, tree: jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape), tree)
+        win = arch.sliding_window
+        ring = 0 < win < max_len
+        length = win if ring else max_len
+        k, v = kv_pair(g, length)
+        out = {
+            "mamba": stack(g, stack(m, ssm_mod.mamba2_cache_init(
+                arch, batch, dtype))),
+            "shared_k": k, "shared_v": v,
+            "shared_pos": jnp.full((g, batch, length), -1, jnp.int32),
+            "length": jnp.zeros((), jnp.int32),
+        }
+        if p["tail"]:
+            out["tail"] = stack(p["tail"], ssm_mod.mamba2_cache_init(
+                arch, batch, dtype))
+        return out
+    if p["kind"] == "whisper":
+        sk, sv = kv_pair(p["dec"], max_len)
+        ck, cv = kv_pair(p["dec"], arch.num_patches)
+        return {"self_k": sk, "self_v": sv, "cross_k": ck, "cross_v": cv,
+                "length": jnp.zeros((), jnp.int32)}
+    raise ValueError(p["kind"])
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token)
+# ---------------------------------------------------------------------------
+
+def decode_step(arch: ArchConfig, params: dict, cache: dict,
+                token: jnp.ndarray, impl: AttnImpl = AttnImpl.REFERENCE,
+                use_scan: bool = True, mesh=None, flash_decode: bool = False,
+                compute_dtype=jnp.bfloat16):
+    """token (B, 1) int32 -> (logits (B, 1, V), cache')."""
+    p = plan(arch)
+    length = cache["length"]
+    B = token.shape[0]
+    x = jnp.take(params["embed"], token, axis=0).astype(compute_dtype)
+    x = x * jnp.asarray(arch.d_model ** 0.5, compute_dtype)
+    cast = lambda t: jax.tree.map(lambda a: a.astype(compute_dtype)
+                                  if a.dtype == jnp.float32 and a.ndim > 1
+                                  else a, t)
+    new_cache = dict(cache)
+
+    if p["kind"] in ("dense", "moe"):
+        # the stacked (L, B, S, KV, Dh) caches ride in the CARRY and are
+        # updated in place at the layer index: no per-iteration restack of
+        # the multi-GB buffer (§Perf hillclimb B iteration 2)
+        def body(carry, xs):
+            x, k_all, v_all = carry
+            lp, i = xs
+            lp = cast(lp)
+            ck = jax.lax.dynamic_index_in_dim(k_all, i, 0, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(v_all, i, 0, keepdims=False)
+            xn = rmsnorm(x, lp["ln1"])
+            if flash_decode and mesh is not None:
+                y, ck, cv = attn.decode_self_attention_sharded(
+                    lp["attn"], xn, ck, cv, length, arch, mesh)
+            else:
+                y, ck, cv = attn.decode_self_attention(lp["attn"], xn, ck, cv,
+                                                       length, arch)
+            x = x + y
+            if p["kind"] == "moe":
+                y2, _ = moe_mod.moe_apply(lp["moe"], rmsnorm(x, lp["ln2"]),
+                                          arch, cap_multiple=8)
+            else:
+                y2 = mlp_apply(lp["mlp"], rmsnorm(x, lp["ln2"]),
+                               arch.activation)
+            k_all = jax.lax.dynamic_update_index_in_dim(k_all, ck, i, 0)
+            v_all = jax.lax.dynamic_update_index_in_dim(v_all, cv, i, 0)
+            return (x + y2, k_all, v_all), 0
+        (x, k, v), _ = _scan(body, (x, cache["k"], cache["v"]),
+                             (params["blocks"],
+                              jnp.arange(p["layers"], dtype=jnp.int32)),
+                             use_scan)
+        new_cache.update(k=k, v=v)
+    elif p["kind"] == "xlstm":
+        def group(x, xs):
+            gp, mcache, scache = xs
+            gp = cast(gp)
+            def mbody(x, ys):
+                lp, c = ys
+                y, c2 = xlstm_mod.mlstm_decode(lp["cell"],
+                                               rmsnorm(x, lp["ln"]), c, arch)
+                return x + y, c2
+            x, mcache2 = _scan(mbody, x, (gp["mlstm"], mcache), use_scan)
+            y, scache2 = xlstm_mod.slstm_decode(
+                gp["slstm"]["cell"], rmsnorm(x, gp["slstm"]["ln"]), scache,
+                arch)
+            return x + y, (mcache2, scache2)
+        x, (mc, sc) = _scan(group, x, (params["blocks"], cache["mlstm"],
+                                       cache["slstm"]), use_scan)
+        new_cache.update(mlstm=mc, slstm=sc)
+    elif p["kind"] == "zamba":
+        shared = cast(params["shared"])
+        win = cache["shared_k"].shape[2]
+        slot = length % win
+
+        def group(x, xs):
+            gp, mcache, ck, cv, cpos = xs
+            gp = cast(gp)
+            def mbody(x, ys):
+                lp, c = ys
+                y, c2 = ssm_mod.mamba2_decode(lp["mamba"],
+                                              rmsnorm(x, lp["ln"]), c, arch)
+                return x + y, c2
+            x, mcache2 = _scan(mbody, x, (gp, mcache), use_scan)
+            xn = rmsnorm(x, shared["ln1"])
+            y, ck, cv, cpos = _ring_decode_attn(shared["attn"], xn, ck, cv,
+                                                cpos, length, slot, arch)
+            x = x + y
+            x = x + mlp_apply(shared["mlp"], rmsnorm(x, shared["ln2"]),
+                              arch.activation)
+            return x, (mcache2, ck, cv, cpos)
+        x, (mc, ck, cv, cpos) = _scan(
+            group, x, (params["blocks"], cache["mamba"], cache["shared_k"],
+                       cache["shared_v"], cache["shared_pos"]), use_scan)
+        new_cache.update(mamba=mc, shared_k=ck, shared_v=cv, shared_pos=cpos)
+        if p["tail"]:
+            def tbody(x, ys):
+                lp, c = ys
+                lp = cast(lp)
+                y, c2 = ssm_mod.mamba2_decode(lp["mamba"],
+                                              rmsnorm(x, lp["ln"]), c, arch)
+                return x + y, c2
+            x, tc = _scan(tbody, x, (params["tail"], cache["tail"]), use_scan)
+            new_cache.update(tail=tc)
+    elif p["kind"] == "whisper":
+        x = x + sinusoidal_positions(
+            int(cache["self_k"].shape[2]), arch.d_model
+        ).astype(compute_dtype)[length][None, None, :]
+        def body(x, xs):
+            lp, sk, sv, ck, cv = xs
+            lp = cast(lp)
+            xn = rmsnorm(x, lp["ln1"])
+            y, sk, sv = attn.decode_self_attention(lp["self_attn"], xn, sk,
+                                                   sv, length, arch)
+            x = x + y
+            x = x + attn.cross_attention(lp["cross_attn"],
+                                         rmsnorm(x, lp["ln_x"]), ck, cv, arch)
+            x = x + mlp_apply(lp["mlp"], rmsnorm(x, lp["ln2"]),
+                              arch.activation)
+            return x, (sk, sv)
+        x, (sk, sv) = _scan(body, x, (params["dec_blocks"], cache["self_k"],
+                                      cache["self_v"], cache["cross_k"],
+                                      cache["cross_v"]), use_scan)
+        new_cache.update(self_k=sk, self_v=sv)
+
+    x = rmsnorm(x, params["final_norm"])
+    head = (params["embed"].T if arch.tie_embeddings else params["lm_head"])
+    logits = x @ head.astype(compute_dtype)
+    new_cache["length"] = length + 1
+    return logits, new_cache
+
+
+def _ring_decode_attn(ap, x1, ck, cv, cpos, length, slot, arch):
+    """Sliding-window decode with a ring cache.  ck/cv (B, W, KV, Dh);
+    cpos (B, W) stores the absolute position held in each slot."""
+    B = x1.shape[0]
+    dh = arch.resolved_head_dim
+    pos = jnp.broadcast_to(length, (B, 1)).astype(jnp.int32)
+    q, k, v = attn._project_qkv(ap, x1, x1, arch)
+    if arch.rope_theta > 0:
+        q = attn.apply_rope(q, pos, arch.rope_theta)
+        k = attn.apply_rope(k, pos, arch.rope_theta)
+    ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+    cpos = jax.lax.dynamic_update_slice(
+        cpos, jnp.broadcast_to(length, (B, 1)).astype(jnp.int32), (0, slot))
+    KV = ck.shape[2]
+    G = arch.num_heads // KV
+    qg = (q * jnp.asarray(dh ** -0.5, q.dtype)).reshape(B, 1, KV, G, dh)
+    s = jnp.einsum("bqkgd,bskd->bqkgs", qg, ck,
+                   preferred_element_type=jnp.float32)
+    valid = (cpos >= 0) & (cpos <= length)
+    s = jnp.where(valid[:, None, None, None, :], s, attn.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqkgs,bskd->bqkgd", p.astype(cv.dtype), cv,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, -1).astype(x1.dtype) @ ap["wo"]
+    return out, ck, cv, cpos
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(arch: ArchConfig, params: dict, batch: dict,
+            impl: AttnImpl = AttnImpl.REFERENCE, remat: str = "none",
+            mesh=None, moe_impl: str = "auto",
+            compute_dtype=jnp.bfloat16) -> Tuple[jnp.ndarray, dict]:
+    """Next-token CE (+ MoE aux).  batch: tokens, labels, [patch/frame]_embeds."""
+    logits, aux, _ = forward_seq(arch, params, batch["tokens"],
+                                 extra=batch, impl=impl, remat=remat,
+                                 mesh=mesh, moe_impl=moe_impl,
+                                 compute_dtype=compute_dtype)
+    mask = batch.get("loss_mask")
+    loss = cross_entropy_loss(logits, batch["labels"], mask)
+    return loss + aux, {"ce": loss, "aux": aux}

@@ -1,0 +1,293 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory with hidden-state-recurrent gates, strictly
+sequential ``lax.scan`` over time — the paper's own constraint).
+
+mLSTM sequence mode uses the stabilised chunkwise form (log-space gates,
+running max ``m``): within a chunk the contribution is quadratic (like flash
+attention with a decay mask), across chunks a (dqk × dv) matrix state is
+carried.  Decode is a single recurrent update — O(1) state, which is why
+xlstm-350m runs the 500k-token shape.
+
+Block structure (pre-LN residual):
+  mLSTM block: x → up(2D)‖gate(2D) → conv4 → q,k,v → cell → groupnorm·silu(gate) → down
+  sLSTM block: x → cell (block-diag recurrent gates/head) → groupnorm → GeGLU FFN(4/3)
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init, groupnorm_heads, rmsnorm
+from repro.models.ssm import causal_conv, conv_step
+
+
+def mlstm_dims(arch: ArchConfig) -> Tuple[int, int, int]:
+    cfg = arch.xlstm
+    di = int(cfg.proj_factor_mlstm * arch.d_model)
+    h = cfg.num_heads
+    return di, h, di // h
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, arch: ArchConfig, dtype=jnp.float32) -> dict:
+    d = arch.d_model
+    di, h, dh = mlstm_dims(arch)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], (d, di), dtype=dtype),
+        "w_gate": dense_init(ks[1], (d, di), dtype=dtype),
+        "conv": dense_init(ks[2], (4, di), scale=0.5, dtype=dtype),
+        "w_q": dense_init(ks[3], (di, di), dtype=dtype),
+        "w_k": dense_init(ks[4], (di, di), dtype=dtype),
+        "w_v": dense_init(ks[5], (di, di), dtype=dtype),
+        "w_if": dense_init(ks[6], (di, 2 * h), scale=di ** -0.5, dtype=jnp.float32),
+        "b_i": jnp.full((h,), -3.0, jnp.float32),   # sparse writes at init
+        "b_f": jnp.full((h,), 3.0, jnp.float32),    # long memory at init
+        "norm": jnp.zeros((h, dh), dtype),
+        "w_down": dense_init(ks[7], (di, d), dtype=dtype),
+    }
+
+
+def _mlstm_chunk_parallel(q, k, v, log_i, log_f, carry):
+    """One chunk, all heads.  q/k/v (B,H,L,dh) f32; log_i/f (B,H,L);
+    carry = (C (B,H,dh,dh), n (B,H,dh), m (B,H))."""
+    C, n, m = carry
+    L = q.shape[2]
+    b = jnp.cumsum(log_f, axis=-1)                            # (B,H,L)
+    # intra-chunk decay: D[i,j] = b[i] - b[j] + log_i[j], j <= i
+    D = b[..., :, None] - b[..., None, :] + log_i[..., None, :]
+    D = jnp.where(jnp.tril(jnp.ones((L, L), bool)), D, -jnp.inf)
+    m_intra = D.max(axis=-1)                                  # (B,H,L)
+    m_inter = b + m[..., None]                                # (B,H,L)
+    m_tot = jnp.maximum(m_intra, m_inter)
+    scale = q.shape[-1] ** -0.5
+
+    S = jnp.einsum("bhld,bhsd->bhls", q, k) * scale
+    W = S * jnp.exp(D - m_tot[..., None])                     # weights
+    h_intra = jnp.einsum("bhls,bhsd->bhld", W, v)
+    dec_in = jnp.exp(m_inter - m_tot)                         # (B,H,L)
+    h_inter = jnp.einsum("bhld,bhde->bhle", q * scale, C) * dec_in[..., None]
+
+    norm_intra = W.sum(axis=-1)
+    norm_inter = jnp.einsum("bhld,bhd->bhl", q * scale, n) * dec_in
+    denom = jnp.maximum(jnp.abs(norm_intra + norm_inter), jnp.exp(-m_tot))
+    h_out = (h_intra + h_inter) / denom[..., None]            # (B,H,L,dh)
+
+    # carry to end of chunk
+    m_next = jnp.maximum(b[..., -1] + m,
+                         (b[..., -1:] - b + log_i).max(axis=-1))
+    dec_C = jnp.exp(b[..., -1] + m - m_next)                  # (B,H)
+    w_kv = jnp.exp(b[..., -1:] - b + log_i - m_next[..., None])  # (B,H,L)
+    C_next = C * dec_C[..., None, None] + jnp.einsum(
+        "bhl,bhld,bhle->bhde", w_kv, k, v)
+    n_next = n * dec_C[..., None] + jnp.einsum("bhl,bhld->bhd", w_kv, k)
+    return h_out, (C_next, n_next, m_next)
+
+
+def mlstm_cell_seq(q, k, v, log_i, log_f, chunk: int, carry=None):
+    """q/k/v (B,S,H,dh); gates (B,S,H).  Returns (h (B,S,H,dh), carry)."""
+    B, S, H, dh = q.shape
+    chunk = min(chunk, S)
+    while S % chunk:                 # largest divisor of S <= chunk
+        chunk -= 1
+    nc = S // chunk
+    r = lambda x: x.reshape(B, nc, chunk, H, dh).transpose(1, 0, 3, 2, 4)
+    g = lambda x: x.reshape(B, nc, chunk, H).transpose(1, 0, 3, 2)
+    if carry is None:
+        carry = (jnp.zeros((B, H, dh, dh), jnp.float32),
+                 jnp.zeros((B, H, dh), jnp.float32),
+                 jnp.zeros((B, H), jnp.float32))
+
+    def step(c, xs):
+        qc, kc, vc, ic, fc = xs
+        h, c2 = _mlstm_chunk_parallel(qc, kc, vc, ic, fc, c)
+        return c2, h
+
+    carry, hs = jax.lax.scan(step, carry, (r(q), r(k), r(v), g(log_i), g(log_f)))
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(B, S, H, dh)
+    return h, carry
+
+
+def mlstm_cell_step(q1, k1, v1, log_i1, log_f1, carry):
+    """One token.  q1/k1/v1 (B,H,dh); gates (B,H)."""
+    C, n, m = carry
+    m_new = jnp.maximum(log_f1 + m, log_i1)
+    i_ = jnp.exp(log_i1 - m_new)
+    f_ = jnp.exp(log_f1 + m - m_new)
+    C = C * f_[..., None, None] + i_[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k1, v1)
+    n = n * f_[..., None] + i_[..., None] * k1
+    scale = q1.shape[-1] ** -0.5
+    num = jnp.einsum("bhd,bhde->bhe", q1 * scale, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q1 * scale, n)),
+                      jnp.exp(-m_new))
+    return num / den[..., None], (C, n, m_new)
+
+
+def _mlstm_qkv(params, x, arch):
+    di, h, dh = mlstm_dims(arch)
+    up = x @ params["w_up"]
+    gate = x @ params["w_gate"]
+    return up, gate
+
+
+def mlstm_seq(params: dict, x: jnp.ndarray, arch: ArchConfig,
+              return_state: bool = False):
+    di, h, dh = mlstm_dims(arch)
+    B, S, _ = x.shape
+    up, gate = _mlstm_qkv(params, x, arch)
+    u = jax.nn.silu(causal_conv(up, params["conv"]))
+    q = (u @ params["w_q"]).reshape(B, S, h, dh).astype(jnp.float32)
+    k = (u @ params["w_k"]).reshape(B, S, h, dh).astype(jnp.float32)
+    v = (up @ params["w_v"]).reshape(B, S, h, dh).astype(jnp.float32)
+    gates = u.astype(jnp.float32) @ params["w_if"]            # (B,S,2H)
+    log_i = jax.nn.log_sigmoid(gates[..., :h] + params["b_i"])
+    log_f = jax.nn.log_sigmoid(gates[..., h:] + params["b_f"])
+    hcell, (C, n, m) = mlstm_cell_seq(q, k, v, log_i, log_f,
+                                      arch.xlstm.chunk_size)
+    hcell = groupnorm_heads(hcell.astype(x.dtype), params["norm"])
+    out = hcell.reshape(B, S, di) * jax.nn.silu(gate)
+    out = out @ params["w_down"]
+    if not return_state:
+        return out
+    return out, {"conv": up[:, -3:, :], "C": C, "n": n, "m": m}
+
+
+def mlstm_cache_init(arch: ArchConfig, batch: int, dtype=jnp.float32) -> dict:
+    di, h, dh = mlstm_dims(arch)
+    return {
+        "conv": jnp.zeros((batch, 3, di), dtype),
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.zeros((batch, h), jnp.float32),
+    }
+
+
+def mlstm_decode(params: dict, x1: jnp.ndarray, cache: dict,
+                 arch: ArchConfig) -> Tuple[jnp.ndarray, dict]:
+    di, h, dh = mlstm_dims(arch)
+    xq = x1[:, 0, :]
+    up = xq @ params["w_up"]
+    gate = xq @ params["w_gate"]
+    u, conv = conv_step(up, cache["conv"], params["conv"])
+    u = jax.nn.silu(u)
+    q = (u @ params["w_q"]).reshape(-1, h, dh).astype(jnp.float32)
+    k = (u @ params["w_k"]).reshape(-1, h, dh).astype(jnp.float32)
+    v = (up @ params["w_v"]).reshape(-1, h, dh).astype(jnp.float32)
+    gates = u.astype(jnp.float32) @ params["w_if"]
+    log_i = jax.nn.log_sigmoid(gates[..., :h] + params["b_i"])
+    log_f = jax.nn.log_sigmoid(gates[..., h:] + params["b_f"])
+    hc, (C, n, m) = mlstm_cell_step(q, k, v, log_i, log_f,
+                                    (cache["C"], cache["n"], cache["m"]))
+    hc = groupnorm_heads(hc[:, None].astype(x1.dtype), params["norm"])[:, 0]
+    out = (hc.reshape(-1, di) * jax.nn.silu(gate)) @ params["w_down"]
+    return out[:, None, :], {"conv": conv, "C": C, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (sequential; 1-in-8 layers)
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, arch: ArchConfig, dtype=jnp.float32) -> dict:
+    d = arch.d_model
+    h = arch.xlstm.num_heads
+    dh = d // h
+    dff = int(arch.xlstm.proj_factor_slstm * d)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": dense_init(ks[0], (d, 4 * d), dtype=dtype),       # z,i,f,o pre-acts
+        "r": dense_init(ks[1], (4, h, dh, dh), scale=dh ** -0.5, dtype=dtype),
+        "b": jnp.concatenate([jnp.zeros((2 * d,), jnp.float32),
+                              jnp.full((d,), 3.0, jnp.float32),   # forget bias
+                              jnp.zeros((d,), jnp.float32)]),
+        "norm": jnp.zeros((h, dh), dtype),
+        "w_ff_gate": dense_init(ks[2], (d, dff), dtype=dtype),
+        "w_ff_up": dense_init(ks[3], (d, dff), dtype=dtype),
+        "w_ff_down": dense_init(ks[4], (dff, d), dtype=dtype),
+    }
+
+
+def slstm_cell_step(wx_t: jnp.ndarray, r: jnp.ndarray, b: jnp.ndarray,
+                    carry, h_heads: int):
+    """One timestep.  wx_t (B,4D) input pre-activations; r (4,H,dh,dh)
+    recurrent block-diagonal weights; carry = (c,n,m,hid) each (B,H,dh)
+    (m is (B,H))."""
+    c, n, m, hid = carry
+    B = wx_t.shape[0]
+    d = wx_t.shape[1] // 4
+    dh = d // h_heads
+    rec = jnp.einsum("bhd,ghde->gbhe", hid, r.astype(hid.dtype))  # (4,B,H,dh)
+    pre = wx_t.reshape(B, 4, h_heads, dh).transpose(1, 0, 2, 3) + \
+        b.reshape(4, 1, h_heads, dh) + rec
+    z = jnp.tanh(pre[0])
+    i_t = pre[1].astype(jnp.float32)
+    f_t = pre[2].astype(jnp.float32)
+    o = jax.nn.sigmoid(pre[3])
+    log_i = i_t                                                 # exp-input gate
+    log_f = jax.nn.log_sigmoid(f_t)
+    m_scalar = jnp.maximum(log_f + m[..., None], log_i)         # (B,H,dh) stab.
+    i_ = jnp.exp(log_i - m_scalar)
+    f_ = jnp.exp(log_f + m[..., None] - m_scalar)
+    c = f_ * c + i_ * z.astype(jnp.float32)
+    n = f_ * n + i_
+    hid_new = (o.astype(jnp.float32) * c / jnp.maximum(n, 1e-6)).astype(hid.dtype)
+    m_new = m_scalar.max(axis=-1)                               # per-head stabiliser
+    return (c, n, m_new, hid_new), hid_new
+
+
+def slstm_cache_init(arch: ArchConfig, batch: int, dtype=jnp.float32) -> dict:
+    h = arch.xlstm.num_heads
+    dh = arch.d_model // h
+    return {
+        "c": jnp.zeros((batch, h, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.zeros((batch, h), jnp.float32),
+        "h": jnp.zeros((batch, h, dh), dtype),
+    }
+
+
+def _slstm_cell(params, x, arch, carry):
+    h = arch.xlstm.num_heads
+    wx = x @ params["w_in"]                                     # (B,S,4D)
+
+    def step(c, wx_t):
+        return slstm_cell_step(wx_t, params["r"], params["b"], c, h)
+
+    carry, hs = jax.lax.scan(step, carry, wx.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2, 3), carry                      # (B,S,H,dh)
+
+
+def slstm_seq(params: dict, x: jnp.ndarray, arch: ArchConfig,
+              return_state: bool = False):
+    B, S, d = x.shape
+    h = arch.xlstm.num_heads
+    init = slstm_cache_init(arch, B, x.dtype)
+    hs, carry = _slstm_cell(params, x, arch,
+                            (init["c"], init["n"], init["m"], init["h"]))
+    y = groupnorm_heads(hs.astype(x.dtype), params["norm"]).reshape(B, S, d)
+    # GeGLU FFN (proj factor 4/3)
+    g = jax.nn.gelu(y @ params["w_ff_gate"]) * (y @ params["w_ff_up"])
+    out = g @ params["w_ff_down"]
+    if not return_state:
+        return out
+    return out, {"c": carry[0], "n": carry[1], "m": carry[2], "h": carry[3]}
+
+
+def slstm_decode(params: dict, x1: jnp.ndarray, cache: dict,
+                 arch: ArchConfig) -> Tuple[jnp.ndarray, dict]:
+    B, _, d = x1.shape
+    h = arch.xlstm.num_heads
+    wx = (x1[:, 0, :] @ params["w_in"])
+    carry = (cache["c"], cache["n"], cache["m"], cache["h"])
+    carry, hid = slstm_cell_step(wx, params["r"], params["b"], carry, h)
+    y = groupnorm_heads(hid[:, None].astype(x1.dtype),
+                        params["norm"]).reshape(B, 1, d)
+    g = jax.nn.gelu(y @ params["w_ff_gate"]) * (y @ params["w_ff_up"])
+    out = g @ params["w_ff_down"]
+    return out, {"c": carry[0], "n": carry[1], "m": carry[2], "h": carry[3]}

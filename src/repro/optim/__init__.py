@@ -1,0 +1,14 @@
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.adafactor import adafactor_init, adafactor_update
+from repro.optim.compression import (int8_compress, int8_decompress,
+                                     topk_compress, topk_decompress)
+from repro.optim.diloco import (diloco_init, diloco_local_delta,
+                                diloco_outer_update)
+from repro.optim.schedule import warmup_cosine
+
+__all__ = [
+    "adamw_init", "adamw_update", "adafactor_init", "adafactor_update",
+    "int8_compress", "int8_decompress", "topk_compress", "topk_decompress",
+    "diloco_init", "diloco_local_delta", "diloco_outer_update",
+    "warmup_cosine",
+]

@@ -1,0 +1,73 @@
+"""Adafactor (Shazeer & Stern, 2018): factored second moments.
+
+For a (..., R, C) weight the second moment is stored as row/col exponential
+averages over the last two dims — O(R+C) instead of O(R·C).  This is what
+makes the 1T-param kimi-k2 trainable within HBM (EXPERIMENTS.md §Dry-run):
+AdamW moments alone would be 8 TB fp32.  1-D leaves fall back to full
+moments.  No momentum (beta1=0), update clipping d=1.0, relative step off
+(we drive lr from the shared schedule).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import clip_by_global_norm
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def adafactor_init(params: Any) -> Dict[str, Any]:
+    def per_leaf(p):
+        if _factored(p.shape):
+            return {
+                "row": jnp.zeros(p.shape[:-1], jnp.float32),          # (..., R)
+                "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"full": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"v": jax.tree.map(per_leaf, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads: Any, state: Dict[str, Any], params: Any,
+                     lr, weight_decay: float = 0.0, decay: float = 0.8,
+                     eps: float = 1e-30, clip_threshold: float = 1.0,
+                     grad_clip: float = 1.0
+                     ) -> Tuple[Any, Dict[str, Any], dict]:
+    grads32, gnorm = clip_by_global_norm(grads, grad_clip)
+    count = state["count"] + 1
+    # time-dependent decay as in the paper: 1 - t^{-0.8}
+    beta2 = 1.0 - count.astype(jnp.float32) ** (-decay)
+
+    def per_leaf(g, v, p):
+        g2 = g * g + eps
+        if _factored(g.shape):
+            row = beta2 * v["row"] + (1 - beta2) * g2.mean(axis=-1)
+            col = beta2 * v["col"] + (1 - beta2) * g2.mean(axis=-2)
+            row_mean = row.mean(axis=-1, keepdims=True)
+            vhat = (row / jnp.maximum(row_mean, eps))[..., None] * \
+                col[..., None, :]
+            new_v = {"row": row, "col": col}
+        else:
+            vhat = beta2 * v["full"] + (1 - beta2) * g2
+            new_v = {"full": vhat}
+        u = g / jnp.sqrt(jnp.maximum(vhat, eps))
+        # update clipping: RMS(u) <= d
+        rms = jnp.sqrt(jnp.mean(u * u))
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        p32 = p.astype(jnp.float32)
+        new_p = p32 - lr * u - lr * weight_decay * p32
+        return new_p.astype(p.dtype), new_v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads32)
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [per_leaf(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    return new_params, {"v": new_v, "count": count}, {"grad_norm": gnorm}

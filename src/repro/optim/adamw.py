@@ -1,0 +1,66 @@
+"""AdamW with decoupled weight decay and global-norm gradient clipping.
+
+Mixed precision: model params may be bf16; the optimizer carries an fp32
+master copy inside its state ('master'), moments in fp32.  Updates are
+computed in fp32 and cast back to the model dtype — the standard production
+recipe.  Pure pytree functions; sharding comes from opt_state_specs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float
+                        ) -> Tuple[Any, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_init(params: Any, keep_master: bool = True) -> Dict[str, Any]:
+    zeros = lambda t: jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), t)
+    state = {"m": zeros(params), "v": zeros(params),
+             "count": jnp.zeros((), jnp.int32)}
+    if keep_master:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def adamw_update(grads: Any, state: Dict[str, Any], params: Any,
+                 lr, weight_decay: float = 0.1, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8,
+                 grad_clip: float = 1.0) -> Tuple[Any, Dict[str, Any], dict]:
+    grads32, gnorm = clip_by_global_norm(grads, grad_clip)
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** c
+    bc2 = 1.0 - b2 ** c
+
+    m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g,
+                     state["m"], grads32)
+    v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g,
+                     state["v"], grads32)
+    master = state.get("master") or jax.tree.map(
+        lambda p: p.astype(jnp.float32), params)
+
+    def step(p32, mm, vv):
+        upd = (mm / bc1) / (jnp.sqrt(vv / bc2) + eps)
+        return p32 - lr * (upd + weight_decay * p32)
+
+    new_master = jax.tree.map(step, master, m, v)
+    new_params = jax.tree.map(lambda p, nm: nm.astype(p.dtype),
+                              params, new_master)
+    new_state = {"m": m, "v": v, "count": count}
+    if "master" in state:
+        new_state["master"] = new_master
+    return new_params, new_state, {"grad_norm": gnorm}

@@ -1,0 +1,48 @@
+"""DiLoCo-style outer optimisation — the Enoki REPLICATED policy for the
+training keygroup (DESIGN.md §2).
+
+Each pod is an Enoki "edge node": it trains on pod-local data against
+pod-local parameters (all hot-path reads/writes local).  Every R inner steps
+the anti-entropy round runs ``diloco_outer_update`` inside the pod-axis
+replication step: pods exchange *deltas* (outer_params − local_params),
+average them, and apply an outer Nesterov step to the shared outer params,
+which are then re-adopted locally.  Staleness = R inner steps — the paper's
+"price of replication", measured in steps instead of milliseconds.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def diloco_init(params: Any) -> Dict[str, Any]:
+    f32 = lambda t: jax.tree.map(lambda p: p.astype(jnp.float32), t)
+    return {
+        "outer_params": f32(params),      # the replicated keygroup contents
+        "momentum": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params),
+        "round": jnp.zeros((), jnp.int32),
+    }
+
+
+def diloco_local_delta(outer_params: Any, local_params: Any) -> Any:
+    """The anti-entropy payload: what this pod learned since the last round."""
+    return jax.tree.map(
+        lambda o, l: o - l.astype(jnp.float32), outer_params, local_params)
+
+
+def diloco_outer_update(state: Dict[str, Any], mean_delta: Any,
+                        outer_lr: float = 0.7, outer_momentum: float = 0.9
+                        ) -> Tuple[Any, Dict[str, Any]]:
+    """Nesterov outer step on the averaged delta.  Returns (new_local_params
+    as fp32, new_state); callers cast to the model dtype."""
+    mom = jax.tree.map(lambda m, d: outer_momentum * m + d,
+                       state["momentum"], mean_delta)
+    new_outer = jax.tree.map(
+        lambda p, m, d: p - outer_lr * (outer_momentum * m + d),
+        state["outer_params"], mom, mean_delta)
+    new_state = {"outer_params": new_outer, "momentum": mom,
+                 "round": state["round"] + 1}
+    return new_outer, new_state

@@ -1,0 +1,6 @@
+from repro.parallel.sharding import (batch_specs, cache_partition_specs,
+                                     named, opt_state_specs,
+                                     param_partition_specs)
+
+__all__ = ["batch_specs", "cache_partition_specs", "named",
+           "opt_state_specs", "param_partition_specs"]

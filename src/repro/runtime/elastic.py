@@ -1,0 +1,57 @@
+"""Elastic re-meshing after pod loss / fleet resize.
+
+The policy: the ``pod`` axis shrinks (replication domain — Enoki keygroups
+survive on peer replicas), the intra-pod ``data``×``model`` grid is
+preserved.  ``remesh`` moves live state onto the new mesh via device_put
+with re-derived shardings; state that only existed on dead pods is restored
+from peer keygroup replicas (caller) or from the last checkpoint.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MeshConfig
+
+
+def degraded_mesh_config(cfg: MeshConfig, alive_pods: int) -> MeshConfig:
+    """New mesh config after pod failures.  Single-pod meshes degrade by
+    shrinking ``data`` (we keep ``model`` intact: TP groups are tightly
+    coupled; losing part of one means losing the pod)."""
+    if "pod" in cfg.axes:
+        i = cfg.axes.index("pod")
+        shape = list(cfg.shape)
+        if alive_pods < 1:
+            raise ValueError("no pods left")
+        shape[i] = alive_pods
+        if alive_pods == 1:
+            # collapse the pod axis entirely
+            shape = [s for j, s in enumerate(shape) if j != i]
+            axes = tuple(a for a in cfg.axes if a != "pod")
+            return MeshConfig(shape=tuple(shape), axes=axes)
+        return MeshConfig(shape=tuple(shape), axes=cfg.axes)
+    return cfg
+
+
+def make_mesh(cfg: MeshConfig) -> Mesh:
+    return jax.make_mesh(cfg.shape, cfg.axes,
+                         axis_types=(jax.sharding.AxisType.Auto,)
+                         * len(cfg.axes))
+
+
+def remesh(state: Any, old_specs: Any, new_mesh: Mesh) -> Any:
+    """Re-place a pytree onto a new mesh.  PartitionSpecs referencing axes
+    the new mesh lacks (e.g. 'pod' after collapse) are stripped."""
+    names = set(new_mesh.axis_names)
+
+    def fix_spec(spec: P) -> P:
+        return P(*[(a if a in names else None) for a in spec])
+
+    def place(x, spec):
+        return jax.device_put(x, NamedSharding(new_mesh, fix_spec(spec)))
+
+    return jax.tree.map(place, state, old_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,54 @@
+"""Failure injection for integration tests (the chaos-monkey role).
+
+Operates on the Cluster simulator and on logical pod replica lists: kill a
+node (liveness + handler removal), corrupt or drop a keygroup replica,
+partition links.  Recovery paths under test: router failover to surviving
+deployments, keygroup restore from peer replicas (Enoki replication doubling
+as fault tolerance), checkpoint fallback, elastic re-mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core.cluster import Cluster
+from repro.core.network import Link
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    cluster: Cluster
+
+    def kill_node(self, node: str) -> None:
+        """Mark dead + drop its handlers: requests must fail over."""
+        self.cluster.naming.mark_dead(node)
+        self.cluster.nodes[node].handlers.clear()
+
+    def lose_keygroup(self, node: str, kg: str) -> None:
+        """Simulate storage loss of one replica."""
+        self.cluster.nodes[node].stores.pop(kg, None)
+        self.cluster.naming.remove_replica(kg, node)
+
+    def restore_keygroup_from_peer(self, node: str, kg: str) -> bool:
+        """Enoki recovery: re-replicate from any surviving replica (§2)."""
+        peers = self.cluster.naming.replicas_of(kg)
+        alive = set(self.cluster.naming.alive_nodes())
+        peers = [p for p in peers if p != node and p in alive]
+        if not peers:
+            return False
+        self.cluster.nodes[node].stores[kg] = \
+            self.cluster.nodes[peers[0]].stores[kg]
+        self.cluster.naming.add_replica(kg, node)
+        return True
+
+    def partition(self, a: str, b: str) -> None:
+        """Sever the a<->b link (infinite latency)."""
+        self.cluster.net.links[(a, b)] = Link(rtt_ms=float("inf"),
+                                              bandwidth_mbps=0.0)
+        self.cluster.net.links[(b, a)] = Link(rtt_ms=float("inf"),
+                                              bandwidth_mbps=0.0)
+
+    def heal(self, a: str, b: str, link: Optional[Link] = None) -> None:
+        link = link or Link(rtt_ms=20.0, bandwidth_mbps=100.0)
+        self.cluster.net.links[(a, b)] = link
+        self.cluster.net.links[(b, a)] = link

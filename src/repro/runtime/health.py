@@ -1,0 +1,53 @@
+"""Heartbeat-based health monitoring (control plane).
+
+Nodes (pods/hosts) report (step, wall_time) heartbeats; the monitor flags
+nodes as dead after ``timeout_s`` of silence and as stragglers when their
+reported step lags the fleet median by more than ``lag_steps``.  Feeds the
+naming service's liveness view (router and elastic re-mesh read from it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+from repro.core.naming import NamingService
+
+
+@dataclasses.dataclass
+class Heartbeat:
+    step: int
+    t: float
+
+
+class HealthMonitor:
+    def __init__(self, naming: Optional[NamingService] = None,
+                 timeout_s: float = 30.0, lag_steps: int = 50):
+        self.naming = naming
+        self.timeout_s = timeout_s
+        self.lag_steps = lag_steps
+        self._beats: Dict[str, Heartbeat] = {}
+
+    def beat(self, node: str, step: int, t: Optional[float] = None) -> None:
+        self._beats[node] = Heartbeat(step=step, t=t if t is not None
+                                      else time.monotonic())
+
+    def dead_nodes(self, now: Optional[float] = None) -> List[str]:
+        now = now if now is not None else time.monotonic()
+        dead = [n for n, hb in self._beats.items()
+                if now - hb.t > self.timeout_s]
+        if self.naming is not None:
+            for n in dead:
+                self.naming.mark_dead(n)
+        return dead
+
+    def stragglers(self) -> List[str]:
+        if not self._beats:
+            return []
+        steps = sorted(hb.step for hb in self._beats.values())
+        median = steps[len(steps) // 2]
+        return [n for n, hb in self._beats.items()
+                if median - hb.step > self.lag_steps]
+
+    def fleet_step(self) -> int:
+        return min((hb.step for hb in self._beats.values()), default=0)

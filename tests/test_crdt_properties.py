@@ -1,0 +1,135 @@
+"""Hypothesis property tests: every Enoki merge is a CRDT join
+(commutative, associative, idempotent) and anti-entropy converges
+regardless of round order — the invariant that makes the paper's
+asynchronous replication safe."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.crdt import (GCounter, LWWRegister, PNCounter, gcounter_merge,
+                             gcounter_value, lww_merge, pncounter_add,
+                             pncounter_merge, pncounter_new, pncounter_value,
+                             vv_merge)
+from repro.core.keygroup import TensorKeygroup
+from repro.core.replication import anti_entropy_round, converge
+from repro.core.store import kv_set, merge_stores, store_contents, store_new
+from repro.core.versioning import MAX_NODES, fnv1a
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+arrays = st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                  min_size=4, max_size=4).map(
+    lambda xs: jnp.asarray(xs, jnp.float32))
+versions = st.lists(st.integers(0, 1000), min_size=4, max_size=4).map(
+    lambda xs: jnp.asarray(xs, jnp.int32))
+
+
+def _reg(draw_val, draw_ver):
+    return LWWRegister(value=draw_val, version=draw_ver)
+
+
+@given(arrays, versions, arrays, versions)
+@settings(**SETTINGS)
+def test_lww_commutative(v1, t1, v2, t2):
+    a, b = _reg(v1, t1), _reg(v2, t2)
+    ab = lww_merge(a, b)
+    ba = lww_merge(b, a)
+    np.testing.assert_array_equal(np.asarray(ab.version),
+                                  np.asarray(ba.version))
+    # where versions tie the values may differ (concurrent identical clocks);
+    # restrict equality check to non-tied slots
+    tie = np.asarray(t1) == np.asarray(t2)
+    np.testing.assert_array_equal(np.asarray(ab.value)[~tie],
+                                  np.asarray(ba.value)[~tie])
+
+
+@given(arrays, versions, arrays, versions, arrays, versions)
+@settings(**SETTINGS)
+def test_lww_associative(v1, t1, v2, t2, v3, t3):
+    a, b, c = _reg(v1, t1), _reg(v2, t2), _reg(v3, t3)
+    left = lww_merge(lww_merge(a, b), c)
+    right = lww_merge(a, lww_merge(b, c))
+    np.testing.assert_array_equal(np.asarray(left.version),
+                                  np.asarray(right.version))
+
+
+@given(arrays, versions)
+@settings(**SETTINGS)
+def test_lww_idempotent(v, t):
+    a = _reg(v, t)
+    aa = lww_merge(a, a)
+    np.testing.assert_array_equal(np.asarray(aa.value), np.asarray(v))
+    np.testing.assert_array_equal(np.asarray(aa.version), np.asarray(t))
+
+
+counters = st.lists(st.integers(0, 1000), min_size=4, max_size=4).map(
+    lambda xs: GCounter(jnp.asarray(xs, jnp.int32)))
+
+
+@given(counters, counters, counters)
+@settings(**SETTINGS)
+def test_gcounter_semilattice(a, b, c):
+    ab = gcounter_merge(a, b)
+    ba = gcounter_merge(b, a)
+    np.testing.assert_array_equal(np.asarray(ab.counts), np.asarray(ba.counts))
+    l = gcounter_merge(gcounter_merge(a, b), c)
+    r = gcounter_merge(a, gcounter_merge(b, c))
+    np.testing.assert_array_equal(np.asarray(l.counts), np.asarray(r.counts))
+    aa = gcounter_merge(a, a)
+    np.testing.assert_array_equal(np.asarray(aa.counts), np.asarray(a.counts))
+
+
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(-50, 50)),
+                min_size=0, max_size=12))
+@settings(**SETTINGS)
+def test_pncounter_value_converges(ops):
+    """Apply ops at different replicas, merge in two different orders:
+    values agree and equal the sequential sum."""
+    replicas = [pncounter_new(4) for _ in range(4)]
+    for node, amount in ops:
+        replicas[node] = pncounter_add(replicas[node], node, amount)
+    import functools
+    m1 = functools.reduce(pncounter_merge, replicas)
+    m2 = functools.reduce(pncounter_merge, reversed(replicas))
+    assert int(pncounter_value(m1)) == int(pncounter_value(m2)) \
+        == sum(a for _, a in ops)
+
+
+@given(st.lists(st.tuples(st.integers(0, 2), st.sampled_from("abcd"),
+                          st.floats(-10, 10, allow_nan=False, width=32)),
+                min_size=1, max_size=10),
+       st.permutations([0, 1, 2]))
+@settings(max_examples=15, deadline=None)
+def test_store_anti_entropy_converges_any_order(writes, order):
+    """The paper's §4.3 guarantee: replica contents converge after
+    anti-entropy regardless of merge order."""
+    stores = [store_new(8, 2, MAX_NODES) for _ in range(3)]
+    clocks = [jnp.zeros((), jnp.int32) for _ in range(3)]
+    for node, key, val in writes:
+        row = jnp.zeros((2,), jnp.float32).at[0].set(val)
+        stores[node], clocks[node], _ = kv_set(
+            stores[node], fnv1a(key), row, 1, clocks[node], node)
+    # full anti-entropy in the drawn permutation order
+    permuted = [stores[i] for i in order]
+    merged = converge(permuted, merge_stores, topology="full")
+    contents = [store_contents(s) for s in merged]
+    assert contents[0] == contents[1] == contents[2]
+    # and in canonical order -> same contents
+    merged2 = converge(stores, merge_stores, topology="full")
+    assert store_contents(merged2[0]) == contents[0]
+
+
+@given(st.integers(2, 5))
+@settings(max_examples=8, deadline=None)
+def test_ring_gossip_converges(n):
+    kgs = []
+    for i in range(n):
+        kgs.append(TensorKeygroup(
+            {"w": jnp.full((3,), float(i))}, jnp.asarray(i, jnp.int32),
+            "lww"))
+    out = converge(kgs, lambda a, b: a.merged_with(b), topology="ring")
+    tops = [float(k.tree["w"][0]) for k in out]
+    assert tops == [float(n - 1)] * n, "ring gossip must reach the newest"

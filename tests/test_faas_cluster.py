@@ -1,0 +1,139 @@
+"""FaaS layer + cluster simulator: Listing 1 semantics, placement latency
+accounting (fig 3), replication events and staleness (fig 6), failover."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ReplicationPolicy
+from repro.core import (Cluster, KeygroupSpec, Router, Session, WriteLog,
+                        enoki_function, get_function)
+from repro.core.faas import FunctionSpec
+from repro.runtime.failure import FailureInjector
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@enoki_function(name="counter", keygroups=["cnt"], codec_width=4)
+def counter_fn(kv, x):
+    cur, found = kv.get("count")
+    new = jnp.where(found, cur[0] + 1.0, 1.0)
+    kv.set("count", jnp.stack([new, 0.0, 0.0, 0.0]))
+    return jnp.stack([new])
+
+
+@enoki_function(name="movavg", keygroups=["avg"], codec_width=16)
+def moving_average(kv, x):
+    """The paper's §4.1 function: store value, read last 10, update pointer
+    (4 kv ops per invocation)."""
+    ptr, found = kv.get("ptr")
+    idx = jnp.where(found, ptr[0], 0.0)
+    kv.set(f"v", jnp.concatenate([jnp.atleast_1d(x)[:1],
+                                  jnp.zeros((15,))]))
+    window, _ = kv.scan([f"v"])
+    kv.set("ptr", jnp.stack([idx + 1.0]))
+    return jnp.stack([window[:, 0].mean()])
+
+
+def make_cluster(**kw):
+    return Cluster({"edge": "edge", "edge2": "edge", "cloud": "cloud"}, **kw)
+
+
+def test_listing1_semantics():
+    c = make_cluster(measure_compute=False)
+    c.deploy(get_function("counter"), ["edge"])
+    r1 = c.invoke("counter", "edge", jnp.zeros((1,)))
+    r2 = c.invoke("counter", "edge", jnp.zeros((1,)), t_send=r1.t_received)
+    assert float(np.asarray(r1.output)[0]) == 1.0
+    assert float(np.asarray(r2.output)[0]) == 2.0, "state persists across calls"
+
+
+def test_warm_start_no_recompile():
+    c = make_cluster(measure_compute=False)
+    c.deploy(get_function("counter"), ["edge"])
+    h1 = c.nodes["edge"].handlers["counter"]
+    c.invoke("counter", "edge", jnp.zeros((1,)))
+    assert c.nodes["edge"].handlers["counter"] is h1
+
+
+def test_fig3_cloud_store_adds_latency():
+    """Store in cloud: every kv op pays the 50ms RTT; with 4 ops the paper
+    measures +200ms (§4.1)."""
+    edge = make_cluster(measure_compute=False)
+    edge.deploy(get_function("movavg"), ["edge"],
+                policy=ReplicationPolicy.REPLICATED)
+    cloud = make_cluster(measure_compute=False)
+    cloud.deploy(get_function("movavg"), ["edge"],
+                 policy=ReplicationPolicy.CLOUD_CENTRAL, owner="cloud")
+    r_edge = edge.invoke("movavg", "edge", jnp.ones((1,)))
+    r_cloud = cloud.invoke("movavg", "edge", jnp.ones((1,)))
+    delta = r_cloud.response_ms - r_edge.response_ms
+    assert len(r_cloud.kv_ops) == 4
+    assert 195.0 <= delta <= 215.0, f"expected ≈+200ms, got {delta}"
+
+
+def test_fig6_replication_staleness():
+    """Write on edge, read on edge2: REPLICATED serves locally with bounded
+    staleness; reads after the one-way delay see the new value."""
+    c = make_cluster(measure_compute=False)
+    c.deploy(get_function("counter"), ["edge", "edge2"],
+             policy=ReplicationPolicy.REPLICATED)
+    w = c.invoke("counter", "edge", jnp.zeros((1,)))
+    # read on edge2 arriving BEFORE the 10ms one-way replication delay
+    # (client->edge2 one-way is 10.5ms, so send while the write replicates)
+    r_early = c.invoke("counter", "edge2", jnp.zeros((1,)),
+                       t_send=w.t_applied - 9.0)
+    # counter_fn increments what it sees: stale -> writes 1 again
+    assert float(np.asarray(r_early.output)[0]) == 1.0
+    # read after the delay: sees edge's write (its own 1 + edge's 1 merged ->
+    # higher version wins; edge2's write was later so value reflects merge)
+    r_late = c.invoke("counter", "edge2", jnp.zeros((1,)),
+                      t_send=w.t_applied + 50.0)
+    assert float(np.asarray(r_late.output)[0]) == 2.0
+
+
+def test_peer_fetch_pays_rtt_on_read():
+    c = make_cluster(measure_compute=False)
+    c.deploy(get_function("counter"), ["edge", "edge2"],
+             policy=ReplicationPolicy.PEER_FETCH, owner="edge")
+    r_local = c.invoke("counter", "edge", jnp.zeros((1,)))
+    r_remote = c.invoke("counter", "edge2", jnp.zeros((1,)),
+                        t_send=r_local.t_received)
+    assert r_remote.response_ms > r_local.response_ms + 30.0, \
+        "remote node must pay the 20ms RTT per kv op"
+
+
+def test_router_failover_and_session():
+    c = make_cluster(measure_compute=False)
+    c.deploy(get_function("counter"), ["edge", "edge2"],
+             policy=ReplicationPolicy.REPLICATED)
+    router = Router(c, client="client")
+    r1 = router.invoke("counter", jnp.zeros((1,)), session_id="s1")
+    assert r1.node == "edge"     # nearest
+    FailureInjector(c).kill_node("edge")
+    r2 = router.invoke("counter", jnp.zeros((1,)), session_id="s1",
+                       t_send=r1.t_received)
+    assert r2.node == "edge2", "router must fail over to the live replica"
+
+
+def test_keygroup_restore_from_peer():
+    c = make_cluster(measure_compute=False)
+    c.deploy(get_function("counter"), ["edge", "edge2"],
+             policy=ReplicationPolicy.REPLICATED)
+    c.invoke("counter", "edge", jnp.zeros((1,)))
+    c.flush_replication()
+    inj = FailureInjector(c)
+    inj.lose_keygroup("edge2", "cnt")
+    assert inj.restore_keygroup_from_peer("edge2", "cnt")
+    r = c.invoke("counter", "edge2", jnp.zeros((1,)), t_send=100.0)
+    assert float(np.asarray(r.output)[0]) == 2.0, \
+        "restored replica must contain the pre-failure state"
+
+
+def test_staleness_writelog():
+    log = WriteLog()
+    log.add(10.0, 1)
+    log.add(20.0, 2)
+    assert log.staleness_of_read(25.0, 2) == 0.0
+    assert log.staleness_of_read(25.0, 1) == 5.0   # overwritten at t=20
+    assert log.latest_at(15.0) == 1

@@ -1,0 +1,87 @@
+"""Correctness of the §Perf optimized paths vs their baselines (subprocess:
+needs >1 host device for the shard_map meshes)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import get_arch, reduced
+    from repro.models import moe as moe_mod
+    from repro.models.attention import (attn_init, decode_self_attention,
+                                        decode_self_attention_sharded,
+                                        blockwise_attention, qscan_attention,
+                                        reference_attention)
+
+    mesh = jax.make_mesh((2, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    # --- EP MoE == auto MoE (values + gradients) --------------------------
+    arch = reduced(get_arch("kimi-k2-1t-a32b"))
+    params = moe_mod.moe_init(jax.random.PRNGKey(0), arch)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, arch.d_model)) * 0.5
+    y_auto, aux_a = jax.jit(lambda p, x: moe_mod.moe_apply(p, x, arch))(
+        params, x)
+    f_ep = jax.jit(lambda p, x: moe_mod.moe_apply_ep(p, x, arch, mesh),
+                   in_shardings=(None,
+                                 NamedSharding(mesh, P("data", None, None))))
+    y_ep, aux_e = f_ep(params, x)
+    assert float(jnp.abs(y_auto - y_ep).max()) < 1e-4, "EP MoE mismatch"
+    assert abs(float(aux_a) - float(aux_e)) < 1e-6
+    g = jax.grad(lambda p: moe_mod.moe_apply_ep(p, x, arch, mesh)[0].sum())(
+        params)
+    assert all(bool(jnp.isfinite(l).all()) for l in jax.tree.leaves(g))
+    print("EP_MOE_OK")
+
+    # --- flash-decode == plain decode attention ---------------------------
+    arch2 = reduced(get_arch("qwen1.5-110b"))
+    ap = attn_init(jax.random.PRNGKey(2), arch2)
+    B, S = 2, 32
+    ck = jax.random.normal(jax.random.PRNGKey(3),
+                           (B, S, arch2.num_kv_heads, 32)) * 0.5
+    cv = jax.random.normal(jax.random.PRNGKey(4),
+                           (B, S, arch2.num_kv_heads, 32)) * 0.5
+    x1 = jax.random.normal(jax.random.PRNGKey(5), (B, 1, arch2.d_model)) * 0.1
+    ln = jnp.asarray(17, jnp.int32)
+    y0, k0, v0 = jax.jit(lambda: decode_self_attention(ap, x1, ck, cv, ln,
+                                                       arch2))()
+    y1, k1, v1 = jax.jit(lambda: decode_self_attention_sharded(
+        ap, x1, ck, cv, ln, arch2, mesh))()
+    assert float(jnp.abs(y0 - y1).max()) < 1e-4, "flash-decode mismatch"
+    assert bool(jnp.all(k0 == k1)) and bool(jnp.all(v0 == v1))
+    print("FLASH_DECODE_OK")
+
+    # --- qscan == blockwise == reference ----------------------------------
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 32))
+    k = jax.random.normal(ks[1], (2, 128, 2, 32))
+    v = jax.random.normal(ks[2], (2, 128, 2, 32))
+    pos = jnp.broadcast_to(jnp.arange(128), (2, 128))
+    ref = reference_attention(q, k, v, pos, pos, causal=True)
+    for fn, name in [(blockwise_attention, "blockwise"),
+                     (qscan_attention, "qscan")]:
+        out = fn(q, k, v, pos, pos, causal=True)
+        err = float(jnp.abs(ref - out).max())
+        assert err < 1e-4, f"{name}: {err}"
+    print("ATTENTION_VARIANTS_OK")
+""")
+
+
+@pytest.mark.slow
+def test_perf_paths_match_baselines(tmp_path):
+    script = tmp_path / "perf_paths.py"
+    script.write_text(SCRIPT)
+    env = dict(os.environ, PYTHONPATH=os.path.join(
+        os.path.dirname(__file__), "..", "src"))
+    res = subprocess.run([sys.executable, str(script)], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+    for marker in ("EP_MOE_OK", "FLASH_DECODE_OK", "ATTENTION_VARIANTS_OK"):
+        assert marker in res.stdout

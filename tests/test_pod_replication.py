@@ -1,0 +1,126 @@
+"""Pod-axis integration tests on an 8-device test mesh (2 pods × 2 data ×
+2 model).  Runs in a subprocess so XLA_FLAGS applies without polluting the
+other tests' single-device world."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import (EnokiConfig, ReplicationPolicy, SHAPES_BY_NAME,
+                               TrainConfig, get_arch, reduced, reduced_shape)
+    from repro.launch import train as train_mod
+    from repro.launch.mesh import make_test_mesh
+    from repro.data import synthetic_batch
+    from repro.optim import diloco_init
+
+    mesh = make_test_mesh((2, 2, 2), ("pod", "data", "model"))
+    arch = reduced(get_arch("internlm2-1.8b"))
+    shape = reduced_shape(SHAPES_BY_NAME["train_4k"])
+    enoki = EnokiConfig(policy=ReplicationPolicy.REPLICATED,
+                        replication_period=2)
+    from repro.configs import ParallelConfig
+    par = ParallelConfig(fsdp=False, remat="none", optimizer="adamw")
+
+    step, sshape, (sspecs, bspecs) = train_mod.make_train_step(
+        arch, shape, mesh, par, enoki, TrainConfig(lr=1e-3), donate=False)
+
+    # materialise pod-stacked state: 2 pods, identical init
+    from repro.models import model_zoo as zoo
+    single = train_mod.init_state(arch, jax.random.PRNGKey(0), par)
+    state = jax.tree.map(lambda l: jnp.stack([l, l]), single)
+    from repro.parallel.sharding import named
+    state = jax.tree.map(lambda x, s: jax.device_put(x, s), state,
+                         named(mesh, sspecs))
+
+    def stacked_batch(step_i):
+        b0 = synthetic_batch(arch, shape, 0, step_i, shard=0, num_shards=2,
+                             batch_override=4)
+        b1 = synthetic_batch(arch, shape, 0, step_i, shard=1, num_shards=2,
+                             batch_override=4)
+        return jax.tree.map(lambda a, b: jnp.stack([a, b]), b0, b1)
+
+    # 1. hot path: pods diverge (different data, no cross-pod sync)
+    for i in range(2):
+        state, metrics = step(state, stacked_batch(i))
+    p0 = jax.tree.leaves(state["params"])[0][0]
+    p1 = jax.tree.leaves(state["params"])[0][1]
+    div = float(jnp.abs(p0 - p1).max())
+    assert div > 0, "pods must diverge between anti-entropy rounds"
+    print("DIVERGENCE_OK", div)
+
+    # 2. anti-entropy: replicate_step converges the pods (staleness -> 0)
+    rstep, outer_shape, _ = train_mod.make_replicate_step(
+        arch, mesh, par, enoki, sshape)
+    outer = diloco_init(single["params"])
+    state, outer = rstep(state, outer)
+    p0 = jax.tree.leaves(state["params"])[0][0]
+    p1 = jax.tree.leaves(state["params"])[0][1]
+    conv = float(jnp.abs(p0 - p1).max())
+    assert conv == 0.0, f"replicas must converge after anti-entropy: {conv}"
+    print("CONVERGENCE_OK", conv)
+
+    # 3. loss trends down across rounds (outer optimizer optimises; a few
+    # noisy steps, so compare window means)
+    losses = []
+    for i in range(2, 20):
+        state, metrics = step(state, stacked_batch(i))
+        losses.append(float(metrics["loss"][0]))
+        if i % 2:
+            state, outer = rstep(state, outer)
+    first, last = sum(losses[:5]) / 5, sum(losses[-5:]) / 5
+    assert last < first, f"loss must trend down: {first} -> {last} ({losses})"
+    print("LOSS_OK", first, "->", last)
+
+    # 4. serving: session replication + failover on the pod axis
+    from repro.launch import serve as serve_mod
+    import dataclasses
+    dshape = dataclasses.replace(reduced_shape(SHAPES_BY_NAME["decode_32k"]),
+                                 seq_len=32, global_batch=4)
+    dstep, shapes, specs = serve_mod.make_decode_step(
+        arch, dshape, mesh, donate=False)
+    params_b16 = jax.tree.map(lambda x: x.astype(jnp.bfloat16),
+                              single["params"])
+    sparams = jax.tree.map(lambda l: jnp.stack([l, l]), params_b16)
+    cache = zoo.init_cache(arch, 2, 32)
+    cache = jax.tree.map(lambda l: jnp.stack([l, l]), cache)
+    token = jnp.ones((2, 2, 1), jnp.int32)
+    for _ in range(3):
+        token, cache = dstep(sparams, cache, token)
+    rsess, rshape, _ = serve_mod.make_replicate_sessions_step(
+        arch, dshape, mesh)
+    backup = rsess(cache)
+    # pod1's backup slot holds pod0's sessions
+    np.testing.assert_array_equal(np.asarray(backup["k"][1]),
+                                  np.asarray(cache["k"][0]))
+    mstep, _, _ = serve_mod.make_migrate_sessions_step(arch, dshape, mesh)
+    dead = jnp.asarray([True, False])
+    restored = mstep(cache, backup, dead)
+    # pod0 flagged dead -> its slot now carries the backup contents
+    np.testing.assert_array_equal(np.asarray(restored["k"][0]),
+                                  np.asarray(backup["k"][0]))
+    print("SERVE_FAILOVER_OK")
+""")
+
+
+@pytest.mark.slow
+def test_pod_replication_end_to_end(tmp_path):
+    script = tmp_path / "pod_test.py"
+    script.write_text(SCRIPT)
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    res = subprocess.run([sys.executable, str(script)], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+    for marker in ("DIVERGENCE_OK", "CONVERGENCE_OK", "LOSS_OK",
+                   "SERVE_FAILOVER_OK"):
+        assert marker in res.stdout, res.stdout

@@ -1,0 +1,83 @@
+"""Sharding-rule invariants: every generated PartitionSpec must divide its
+array evenly on the production meshes, for every assigned architecture —
+the property the dry-run relies on (a violation fails at .compile())."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import (ARCH_IDS, ParallelConfig, SHAPES, get_arch)
+from repro.launch.train import default_parallel, opt_specs_tree, state_shapes
+from repro.models import model_zoo as zoo
+from repro.parallel.sharding import (cache_partition_specs,
+                                     param_partition_specs)
+
+jax.config.update("jax_platform_name", "cpu")
+
+MESH_SIZES = {"data": 16, "model": 16}
+
+
+class FakeMesh:
+    """Shape-only stand-in (the rules only read mesh.shape)."""
+    shape = MESH_SIZES
+    axis_names = tuple(MESH_SIZES)
+
+
+def _check(tree_shapes, tree_specs, what):
+    leaves_sh = jax.tree.leaves(tree_shapes)
+    leaves_sp = jax.tree.leaves(tree_specs,
+                                is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves_sh) == len(leaves_sp), what
+    for sh, sp in zip(leaves_sh, leaves_sp):
+        shape = sh.shape if hasattr(sh, "shape") else sh
+        for d, axis in enumerate(sp):
+            if axis is None:
+                continue
+            axes = axis if isinstance(axis, tuple) else (axis,)
+            total = 1
+            for a in axes:
+                total *= MESH_SIZES[a]
+            assert shape[d] % total == 0, \
+                f"{what}: dim {d} of {shape} not divisible by {axis}"
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_param_specs_divide(arch_id):
+    arch = get_arch(arch_id)
+    pshape = jax.eval_shape(
+        lambda: zoo.init_params(arch, jax.random.PRNGKey(0),
+                                dtype=jnp.bfloat16))
+    for fsdp in (False, True):
+        par = ParallelConfig(fsdp=fsdp)
+        specs = param_partition_specs(pshape, arch, FakeMesh, par)
+        _check(pshape, specs, f"{arch_id} params fsdp={fsdp}")
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_opt_state_specs_divide(arch_id):
+    arch = get_arch(arch_id)
+    par = default_parallel(arch, SHAPES[0])
+    sshape = state_shapes(arch, par)
+    specs = opt_specs_tree(sshape["opt"], arch, FakeMesh, par)
+    _check(sshape["opt"], specs, f"{arch_id} opt")
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+@pytest.mark.parametrize("batch,seq", [(128, 1024), (32, 2048)])
+def test_cache_specs_divide(arch_id, batch, seq):
+    arch = get_arch(arch_id)
+    cshape = jax.eval_shape(lambda: zoo.init_cache(arch, batch, seq))
+    for prefer_seq in (False, True):
+        specs = cache_partition_specs(cshape, arch, FakeMesh, batch,
+                                      prefer_seq=prefer_seq)
+        _check(cshape, specs, f"{arch_id} cache prefer_seq={prefer_seq}")
+
+
+def test_whisper_vocab_not_sharded():
+    """51865 % 16 != 0: the embedding must fall back to replication rather
+    than emit an invalid spec (the divisibility-guard contract)."""
+    arch = get_arch("whisper-tiny")
+    pshape = jax.eval_shape(
+        lambda: zoo.init_params(arch, jax.random.PRNGKey(0)))
+    specs = param_partition_specs(pshape, arch, FakeMesh, ParallelConfig())
+    assert specs["embed"][0] is None

@@ -1,0 +1,123 @@
+"""Unit tests for the node-local KV arena (core/store.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.store import (Store, kv_delete, kv_get, kv_scan, kv_set,
+                              merge_stores, store_contents, store_new)
+from repro.core.versioning import MAX_NODES, fnv1a, pack_version, unpack_clock
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _row(store, val):
+    row = jnp.zeros((store.value_width,), store.values.dtype)
+    return row.at[:len(val)].set(jnp.asarray(val, store.values.dtype))
+
+
+def test_set_get_roundtrip():
+    s = store_new(8, 4, MAX_NODES)
+    clock = jnp.zeros((), jnp.int32)
+    h = fnv1a("x")
+    s, clock, ok = kv_set(s, h, _row(s, [1.0, 2.0]), 2, clock, 0)
+    assert bool(ok)
+    val, length, ver, found = kv_get(s, h)
+    assert bool(found) and int(length) == 2
+    np.testing.assert_allclose(np.asarray(val[:2]), [1.0, 2.0])
+    assert int(unpack_clock(ver)) == int(clock)
+
+
+def test_get_missing():
+    s = store_new(8, 4, MAX_NODES)
+    _, _, _, found = kv_get(s, fnv1a("nope"))
+    assert not bool(found)
+
+
+def test_update_in_place_no_new_slot():
+    s = store_new(4, 4, MAX_NODES)
+    clock = jnp.zeros((), jnp.int32)
+    h = fnv1a("k")
+    s, clock, _ = kv_set(s, h, _row(s, [1.0]), 1, clock, 0)
+    s, clock, _ = kv_set(s, h, _row(s, [2.0]), 1, clock, 0)
+    assert int((s.keys != 0).sum()) == 1
+    val, _, _, _ = kv_get(s, h)
+    assert float(val[0]) == 2.0
+
+
+def test_arena_overflow_drops_write():
+    s = store_new(2, 4, MAX_NODES)
+    clock = jnp.zeros((), jnp.int32)
+    for i in range(2):
+        s, clock, ok = kv_set(s, fnv1a(f"k{i}"), _row(s, [float(i)]), 1,
+                              clock, 0)
+        assert bool(ok)
+    s2, clock2, ok = kv_set(s, fnv1a("k2"), _row(s, [9.0]), 1, clock, 0)
+    assert not bool(ok)
+    assert int(clock2) == int(clock)          # clock unchanged on drop
+    assert store_contents(s2) == store_contents(s)
+
+
+def test_delete_tombstone_replicates():
+    s = store_new(4, 4, MAX_NODES)
+    clock = jnp.zeros((), jnp.int32)
+    h = fnv1a("k")
+    s, clock, _ = kv_set(s, h, _row(s, [1.0]), 1, clock, 0)
+    s, clock, ok = kv_delete(s, h, clock, 0)
+    assert bool(ok)
+    _, _, _, found = kv_get(s, h)
+    assert not bool(found)                    # reads as absent
+    # but the tombstone wins an LWW merge against the stale peer copy
+    peer = store_new(4, 4, MAX_NODES)
+    pc = jnp.zeros((), jnp.int32)
+    peer, pc, _ = kv_set(peer, h, _row(peer, [1.0]), 1, pc, 1)
+    merged = merge_stores(peer, s)
+    _, _, _, found = kv_get(merged, h)
+    assert not bool(found), "tombstone must dominate the older write"
+
+
+def test_scan_multi_get():
+    s = store_new(8, 4, MAX_NODES)
+    clock = jnp.zeros((), jnp.int32)
+    for i in range(3):
+        s, clock, _ = kv_set(s, fnv1a(f"k{i}"), _row(s, [float(i)]), 1,
+                             clock, 0)
+    vals, lengths, found = kv_scan(s, [fnv1a("k0"), fnv1a("k2"),
+                                       fnv1a("missing")])
+    assert list(np.asarray(found)) == [True, True, False]
+    np.testing.assert_allclose(np.asarray(vals[:2, 0]), [0.0, 2.0])
+
+
+def test_merge_takes_newer_and_inserts_new():
+    a = store_new(8, 4, MAX_NODES)
+    b = store_new(8, 4, MAX_NODES)
+    ca = jnp.zeros((), jnp.int32)
+    cb = jnp.zeros((), jnp.int32)
+    h_shared = fnv1a("shared")
+    a, ca, _ = kv_set(a, h_shared, _row(a, [1.0]), 1, ca, 0)
+    b, cb, _ = kv_set(b, h_shared, _row(b, [2.0]), 1, cb, 1)
+    b, cb, _ = kv_set(b, h_shared, _row(b, [3.0]), 1, cb, 1)  # newer clock
+    b, cb, _ = kv_set(b, fnv1a("bonly"), _row(b, [7.0]), 1, cb, 1)
+    m = merge_stores(a, b)
+    val, _, _, _ = kv_get(m, h_shared)
+    assert float(val[0]) == 3.0
+    val, _, _, found = kv_get(m, fnv1a("bonly"))
+    assert bool(found) and float(val[0]) == 7.0
+    np.testing.assert_array_equal(np.asarray(m.vv),
+                                  np.maximum(np.asarray(a.vv),
+                                             np.asarray(b.vv)))
+
+
+def test_lamport_clock_dominates_after_merge():
+    """A node that merges remote state must issue strictly newer versions."""
+    a = store_new(8, 4, MAX_NODES)
+    b = store_new(8, 4, MAX_NODES)
+    ca = jnp.zeros((), jnp.int32)
+    cb = jnp.zeros((), jnp.int32)
+    h = fnv1a("k")
+    for _ in range(5):
+        b, cb, _ = kv_set(b, h, _row(b, [9.0]), 1, cb, 1)
+    a = merge_stores(a, b)
+    a, ca, _ = kv_set(a, h, _row(a, [1.0]), 1, ca, 0)
+    val, _, ver, _ = kv_get(a, h)
+    assert float(val[0]) == 1.0
+    assert int(unpack_clock(ver)) > int(cb), "local write must win LWW"
