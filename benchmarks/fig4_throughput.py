@@ -1,33 +1,68 @@
-"""Fig 4 reproduction: read/write throughput vs data item size, store at
-edge vs cloud.
+"""Fig 4 reproduction: read/write throughput — item-size sweep AND the
+batched-invocation sweep.
 
 The paper drives a closed workload (100 client threads, 2 min) against a
-read function and a write function with item sizes 1 B … 1 MB.  Here the
-per-op local store cost is MEASURED (real jitted arena ops on this host);
-the closed-loop throughput then follows Little's law with the network model:
+read function and a write function with item sizes 1 B … 1 MB.  Two views:
 
-    latency(size)   = client_rtt + per-op network (placement) + compute
-    tasks/s         = threads / latency,     capped by link bandwidth
-    MB/s            = tasks/s × size
+1. **Size sweep** (the paper's figure): per-op local store cost is MEASURED
+   (real jitted arena ops on this host); closed-loop throughput then follows
+   Little's law with the network model:
 
-Expected shapes (paper §4.2): cloud reads saturate the 12.5 MB/s (100 Mb/s)
-edge-cloud link for items ≳100 kB; edge reads keep scaling; writes show the
-same ordering with a lower ceiling.
+       latency(size)   = client_rtt + per-op network (placement) + compute
+       tasks/s         = threads / latency,     capped by link bandwidth
+       MB/s            = tasks/s × size
+
+   Expected shapes (paper §4.2): cloud reads saturate the 12.5 MB/s
+   (100 Mb/s) edge-cloud link for items ≳100 kB; edge reads keep scaling.
+
+2. **Batch sweep** (this repo's §4.2 hot-path work): wall-clock ops/s of a
+   REAL Enoki node serving stateful get/set functions, sweeping the batched
+   invocation engine over batch sizes {1, 8, 64, 256}.  batch=1 is the
+   sequential ``Cluster.invoke`` baseline (one Python round-trip + one
+   device dispatch per request); larger batches go through
+   ``Cluster.invoke_batch`` (one dispatch per batch).  The speedup is pure
+   per-invocation overhead removed — exactly the bottleneck the batching
+   engine targets.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import Cluster, enoki_function, get_function
 from repro.core.network import paper_topology
 from repro.core.store import kv_get, kv_set, store_new
 from repro.core.versioning import MAX_NODES, fnv1a
 
 SIZES = [1, 100, 1_000, 10_000, 100_000, 1_000_000]
 THREADS = 100
+BATCH_SIZES = [1, 8, 64, 256]
+BATCH_ITEM_WIDTH = 64          # float32 payload width for the batch sweep
+BATCH_REQUESTS = 512
+
+
+# ---------------------------------------------------------------------------
+# The batch-sweep workload functions (real stateful handlers)
+# ---------------------------------------------------------------------------
+
+@enoki_function(name="fig4_read", keygroups=["fig4kg"],
+                codec_width=BATCH_ITEM_WIDTH)
+def fig4_read(kv, x):
+    val, found = kv.get("item")
+    return val[:1]
+
+
+@enoki_function(name="fig4_write", keygroups=["fig4kg"],
+                codec_width=BATCH_ITEM_WIDTH)
+def fig4_write(kv, x):
+    cur, _ = kv.get("item")
+    kv.set("item", cur + x)
+    return x[:1]
 
 
 def _measure_local_op_ms(size: int, op: str) -> float:
@@ -62,7 +97,7 @@ def _measure_local_op_ms(size: int, op: str) -> float:
     return float(np.median(ts))
 
 
-def run():
+def run_size_sweep():
     net = paper_topology()
     rows = []
     for op in ("read", "write"):
@@ -92,16 +127,102 @@ def run():
     return rows
 
 
-def main():
-    from benchmarks.common import print_table
-    rows = run()
-    print_table(rows, "Fig 4 — read/write throughput vs item size")
-    ceiling = [r for r in rows if r["op"] == "read" and r["store"] == "cloud"
-               and r["size_B"] >= 100_000]
-    print(f"\ncloud read ceiling at >=100kB: "
-          f"{[r['MB_per_s'] for r in ceiling]} MB/s (paper: 12.5 MB/s)")
+# ---------------------------------------------------------------------------
+# Batch sweep: the batched invocation engine on a real node
+# ---------------------------------------------------------------------------
+
+def _drive(cluster: Cluster, fn_name: str, batch: int,
+           n_requests: int) -> float:
+    """Wall-clock ops/s for ``n_requests`` invocations at ``batch`` size
+    (batch 1 = the sequential invoke path), blocking until the store state
+    is actually materialised."""
+    x = np.ones((BATCH_ITEM_WIDTH,), np.float32)
+    xs = [x] * max(batch, 1)
+
+    def block():
+        jax.block_until_ready(cluster.nodes["edge"].stores["fig4kg"])
+
+    # warm the jit caches for every bucket the timed loop will hit
+    # (including the ragged tail's smaller bucket)
+    if batch == 1:
+        cluster.invoke(fn_name, "edge", x)
+    else:
+        cluster.invoke_batch(fn_name, "edge", xs)
+        tail = n_requests % batch
+        if tail:
+            cluster.invoke_batch(fn_name, "edge", xs[:tail])
+    block()
+
+    # every path must MATERIALISE its responses (a serving node replies with
+    # bytes, not a lazy device array); invoke_batch already does internally
+    t0 = time.perf_counter()
+    if batch == 1:
+        for i in range(n_requests):
+            r = cluster.invoke(fn_name, "edge", x, t_send=float(i))
+            np.asarray(r.output)
+    else:
+        for lo in range(0, n_requests, batch):
+            bs = min(batch, n_requests - lo)   # ragged tail: no extra ops
+            cluster.invoke_batch(fn_name, "edge", xs[:bs],
+                                 t_sends=[float(lo + j)
+                                          for j in range(bs)])
+    block()
+    return n_requests / (time.perf_counter() - t0)
+
+
+def run_batch_sweep(batch_sizes=tuple(BATCH_SIZES),
+                    n_requests: int = BATCH_REQUESTS):
+    cluster = Cluster({"edge": "edge", "cloud": "cloud"},
+                      net=paper_topology(), measure_compute=False)
+    cluster.deploy(get_function("fig4_read"), ["edge"])
+    cluster.deploy(get_function("fig4_write"), ["edge"])
+    batch_sizes = sorted(set(batch_sizes))   # baseline = smallest batch
+    rows = []
+    for op, fn_name in (("read", "fig4_read"), ("write", "fig4_write")):
+        base = None
+        for b in batch_sizes:
+            ops_s = _drive(cluster, fn_name, b, n_requests)
+            if base is None:
+                base = ops_s
+            rows.append({"op": op, "batch": b,
+                         "ops_per_s": round(ops_s, 1),
+                         "base_batch": batch_sizes[0],
+                         "speedup_vs_base": round(ops_s / base, 2)})
     return rows
 
 
+def run():
+    return {"size_sweep": run_size_sweep(),
+            "batch_sweep": run_batch_sweep()}
+
+
+def main(json_out: str = None):
+    from benchmarks.common import print_table
+    results = run()
+    print_table(results["size_sweep"],
+                "Fig 4 — read/write throughput vs item size")
+    ceiling = [r for r in results["size_sweep"]
+               if r["op"] == "read" and r["store"] == "cloud"
+               and r["size_B"] >= 100_000]
+    print(f"\ncloud read ceiling at >=100kB: "
+          f"{[r['MB_per_s'] for r in ceiling]} MB/s (paper: 12.5 MB/s)")
+    print_table(results["batch_sweep"],
+                "Fig 4b — batched invocation engine ops/s vs batch size")
+    for op in ("read", "write"):
+        by_batch = {r["batch"]: r for r in results["batch_sweep"]
+                    if r["op"] == op}
+        if 64 in by_batch and 1 in by_batch:
+            speedup = (by_batch[64]["ops_per_s"]
+                       / by_batch[1]["ops_per_s"])
+            print(f"{op}: batch-64 speedup vs batch-1 = {speedup:.1f}x")
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {json_out}")
+    return results
+
+
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json-out", default=None)
+    main(ap.parse_args().json_out)

@@ -43,8 +43,7 @@ def main():
 
     if "fig4" in which:
         from benchmarks import fig4_throughput
-        rows = fig4_throughput.main()
-        results["fig4"] = {"rows": rows}
+        results["fig4"] = fig4_throughput.main()
 
     if "fig6" in which:
         from benchmarks import fig6_replication

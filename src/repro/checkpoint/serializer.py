@@ -3,17 +3,45 @@
 Layout: a msgpack map {path: {dtype, shape, data}} with an integrity footer.
 bfloat16 has no numpy wire type, so it travels as uint16 bit patterns with
 dtype tag 'bfloat16'.
+
+``zstandard`` is optional: environments without it fall back to stdlib
+``zlib``.  Decompression sniffs the frame magic so either side can read
+blobs produced by the other (zstd frames start with 28 B5 2F FD).
 """
 from __future__ import annotations
 
 import hashlib
+import zlib
 from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ModuleNotFoundError:          # degrade gracefully to stdlib zlib
+    zstandard = None
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def compress_bytes(data: bytes, level: int = 3) -> bytes:
+    """zstd when available, zlib otherwise (same framing either way).
+    zstd levels go to 22; clamp for zlib's 0..9 range."""
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=level).compress(data)
+    return zlib.compress(data, min(level, 9))
+
+
+def decompress_bytes(blob: bytes) -> bytes:
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise IOError("blob is zstd-compressed but zstandard is not "
+                          "installed; re-save with zlib or install zstandard")
+        return zstandard.ZstdDecompressor().decompress(blob)
+    return zlib.decompress(blob)
 
 
 def _path_str(path) -> str:
@@ -54,12 +82,11 @@ def serialize_tree(tree: Any, level: int = 3) -> bytes:
     digest = hashlib.sha256(raw).hexdigest().encode()
     framed = msgpack.packb({"payload": raw, "sha256": digest},
                            use_bin_type=True)
-    return zstandard.ZstdCompressor(level=level).compress(framed)
+    return compress_bytes(framed, level)
 
 
 def deserialize_tree(blob: bytes, template: Any) -> Any:
-    framed = msgpack.unpackb(zstandard.ZstdDecompressor().decompress(blob),
-                             raw=False)
+    framed = msgpack.unpackb(decompress_bytes(blob), raw=False)
     raw = framed["payload"]
     if hashlib.sha256(raw).hexdigest().encode() != framed["sha256"]:
         raise IOError("checkpoint integrity check failed (sha256 mismatch)")

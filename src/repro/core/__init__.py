@@ -10,9 +10,11 @@ Layers (DESIGN.md §3):
 """
 from repro.core.cluster import Cluster, InvokeResult
 from repro.core.consistency import Session
+from repro.core.engine import BatchedInvocationEngine
 from repro.core.crdt import (GCounter, LWWRegister, PNCounter, gcounter_merge,
                              lww_merge, pncounter_merge, vv_merge)
-from repro.core.faas import (KV, FunctionSpec, VectorCodec, enoki_function,
+from repro.core.faas import (KV, FunctionSpec, VectorCodec,
+                             compile_batched_handler, enoki_function,
                              get_function, registry)
 from repro.core.keygroup import KeygroupSpec, TensorKeygroup
 from repro.core.naming import NamingService
@@ -23,16 +25,19 @@ from repro.core.replication import (anti_entropy_round, converge,
 from repro.core.router import Router
 from repro.core.staleness import WriteLog, percentiles
 from repro.core.store import (Store, kv_delete, kv_get, kv_scan, kv_set,
-                              merge_stores, store_new)
+                              kv_set_fold, merge_stores, store_new,
+                              store_select)
 from repro.core.versioning import fnv1a
 
 __all__ = [
-    "Cluster", "InvokeResult", "Session", "GCounter", "LWWRegister",
+    "Cluster", "InvokeResult", "Session", "BatchedInvocationEngine",
+    "GCounter", "LWWRegister",
     "PNCounter", "gcounter_merge", "lww_merge", "pncounter_merge", "vv_merge",
-    "KV", "FunctionSpec", "VectorCodec", "enoki_function", "get_function",
+    "KV", "FunctionSpec", "VectorCodec", "compile_batched_handler",
+    "enoki_function", "get_function",
     "registry", "KeygroupSpec", "TensorKeygroup", "NamingService",
     "NetworkModel", "paper_topology", "anti_entropy_round", "converge",
     "make_pod_replicate_step", "replicate_pod_axis", "Router", "WriteLog",
     "percentiles", "Store", "kv_delete", "kv_get", "kv_scan", "kv_set",
-    "merge_stores", "store_new", "fnv1a",
+    "kv_set_fold", "merge_stores", "store_new", "store_select", "fnv1a",
 ]

@@ -30,12 +30,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ReplicationPolicy
-from repro.core.faas import FunctionSpec, VectorCodec, compile_handler
+from repro.core.engine import BatchedInvocationEngine
+from repro.core.faas import (FunctionSpec, VectorCodec,
+                             compile_batched_handler, compile_handler)
 from repro.core.keygroup import KeygroupSpec, arena_new
 from repro.core.naming import NamingService
 from repro.core.network import NetworkModel, paper_topology
 from repro.core.store import Store, merge_stores
 from repro.core.versioning import MAX_NODES
+
+
+def fires_sync_downstream(y) -> bool:
+    """The paper's fig-8 filter convention: a leading output element < 0
+    suppresses synchronous downstream calls.  Single source of truth for
+    both the sequential (`invoke`) and batched (engine) routing paths."""
+    arr = np.asarray(y)
+    return bool(arr.size == 0 or float(arr.ravel()[0]) >= 0.0)
 
 
 @dataclasses.dataclass
@@ -58,6 +68,8 @@ class _Node:
     stores: Dict[str, Store] = dataclasses.field(default_factory=dict)
     clock: jnp.ndarray = None
     handlers: Dict[str, Callable] = dataclasses.field(default_factory=dict)
+    batched_handlers: Dict[str, Callable] = dataclasses.field(
+        default_factory=dict)
     compute_ms: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
@@ -81,6 +93,7 @@ class Cluster:
         self.replication_bytes = 0   # accounting for §Perf
         self.specs: Dict[str, FunctionSpec] = {}
         self.policies: Dict[str, KeygroupSpec] = {}
+        self.engine = BatchedInvocationEngine(self)
 
     # ------------------------------------------------------------------ deploy
     def create_keygroup(self, spec: KeygroupSpec, nodes: List[str]) -> None:
@@ -131,6 +144,8 @@ class Cluster:
         for n in nodes:
             nd = self.nodes[n]
             nd.handlers[spec.name] = compile_handler(spec, nd.node_id, example)
+            nd.batched_handlers[spec.name] = compile_batched_handler(
+                spec, nd.node_id, example)
             self.naming.add_deployment(spec.name, n)
             if self._measure:
                 nd.compute_ms[spec.name] = self._measure_compute(spec, nd, example)
@@ -196,6 +211,32 @@ class Cluster:
             self.replication_bytes += nbytes
 
     # ----------------------------------------------------------------- invoke
+    def _resolve_placement(self, spec: FunctionSpec, node: str
+                           ) -> Tuple[Optional[str], str, float]:
+        """(keygroup, store_node, per_op_rtt_ms) for an invocation at
+        ``node`` — which replica the kv ops hit and what each op costs."""
+        kg = spec.keygroups[0] if spec.keygroups else None
+        if kg is None:
+            return None, node, 0.0
+        kspec = self.policies[kg]
+        if kspec.policy == ReplicationPolicy.REPLICATED:
+            return kg, node, 0.0
+        owner = (kspec.owner or
+                 (self._cloud_node()
+                  if kspec.policy == ReplicationPolicy.CLOUD_CENTRAL
+                  else node))
+        per_op_ms = 0.0 if owner == node else self.net.rtt_ms(node, owner)
+        return kg, owner, per_op_ms
+
+    def _op_network_ms(self, node: str, store_node: str, per_op_ms: float,
+                       ops: List[Tuple[str, int]]) -> float:
+        """Per-op network charges for remote store placements (§4.1: the
+        +200ms of 4 kv ops against a cloud store)."""
+        if per_op_ms <= 0.0:
+            return 0.0
+        link = self.net.link(node, store_node)
+        return sum(per_op_ms + link.transfer_ms(nbytes) for _, nbytes in ops)
+
     def invoke(self, fn_name: str, node: str, x, t_send: float = 0.0,
                client: str = "client", payload_bytes: int = 64,
                _depth: int = 0) -> InvokeResult:
@@ -206,20 +247,7 @@ class Cluster:
                              + self.net.link(client, node).transfer_ms(payload_bytes))
 
         # which store does this function's state live in? (placement)
-        kg = spec.keygroups[0] if spec.keygroups else None
-        if kg is None:
-            store_node, per_op_ms = node, 0.0
-        else:
-            kspec = self.policies[kg]
-            if kspec.policy == ReplicationPolicy.REPLICATED:
-                store_node, per_op_ms = node, 0.0
-            else:
-                owner = (kspec.owner or
-                         (self._cloud_node()
-                          if kspec.policy == ReplicationPolicy.CLOUD_CENTRAL
-                          else node))
-                store_node = owner
-                per_op_ms = 0.0 if owner == node else self.net.rtt_ms(node, owner)
+        kg, store_node, per_op_ms = self._resolve_placement(spec, node)
 
         # fold in any replication that arrived before we touch the store
         if kg is not None:
@@ -239,12 +267,7 @@ class Cluster:
                 nd.clock, x)
 
         compute = nd.compute_ms.get(fn_name, 0.0)
-        # per-op network charges for remote store placements (§4.1: the +200ms)
-        op_net = 0.0
-        for kind, nbytes in ops:
-            if per_op_ms > 0.0:
-                link = self.net.link(node, store_node)
-                op_net += per_op_ms + link.transfer_ms(nbytes)
+        op_net = self._op_network_ms(node, store_node, per_op_ms, ops)
         t_applied = t_arrive + compute + op_net
         chain = [fn_name]
 
@@ -255,7 +278,8 @@ class Cluster:
 
         # synchronous downstream calls (fig 8 call chains)
         t_down = t_applied
-        downstream = spec.calls and self._route_downstream(spec, y)
+        downstream = (self._route_downstream(spec, y)
+                      if (spec.calls or spec.async_calls) else [])
         if downstream:
             for callee, is_async in downstream:
                 target = self._nearest_deployment(callee, node)
@@ -273,14 +297,39 @@ class Cluster:
                             t_applied=t_applied, kv_ops=ops, node=node,
                             chain=chain)
 
+    def invoke_batch(self, fn_name: str, node: str, xs,
+                     t_sends: Optional[List[float]] = None,
+                     client: str = "client",
+                     payload_bytes: int = 64) -> List[InvokeResult]:
+        """Invoke ``fn_name`` at ``node`` for every input in ``xs`` with ONE
+        batched device dispatch (per bucket chunk) instead of len(xs) Python
+        round-trips — the §4.2 throughput hot path.
+
+        The emulated network is threaded per request (each entry of
+        ``t_sends`` keeps its own arrival/response timeline).  For the
+        invoked function itself, store-update semantics match len(xs)
+        sequential ``invoke`` calls exactly (scan-fold, last-writer-wins,
+        identical clocks).  Downstream call chains follow the engine's
+        coalescing model instead: callees run after their whole caller
+        CHUNK (batches fold chunk-by-chunk at the largest bucket, 256 by
+        default), so a callee that reads state its caller writes sees the
+        post-chunk value, not its own request's prefix (see core/engine.py and
+        docs/batched_engine.md for this and the replication-coalescing
+        trade-off).  Returns per-request InvokeResults in input order;
+        ``output`` holds host numpy rows (the batch is materialised once),
+        unlike ``invoke``'s lazy device arrays.
+        """
+        return self.engine.dispatch(fn_name, node, xs, t_sends,
+                                    client=client,
+                                    payload_bytes=payload_bytes)
+
     def _route_downstream(self, spec: FunctionSpec, y) -> List[Tuple[str, bool]]:
         """Which downstream calls fire, given the handler output.
 
         Convention for composed apps: a handler returning a vector whose first
         element is < 0 suppresses synchronous downstream calls (the 'filtered'
         branch of the paper's fig 8 filters)."""
-        first = float(np.asarray(y).ravel()[0]) if np.asarray(y).size else 0.0
-        fire = first >= 0.0
+        fire = fires_sync_downstream(y)
         out = [(c, False) for c in spec.calls if fire]
         out += [(c, True) for c in spec.async_calls]
         return out

@@ -53,6 +53,21 @@ def store_new(slots: int, value_width: int, num_nodes: int,
     )
 
 
+def store_select(pred, a: Store, b: Store) -> Store:
+    """``pred ? a : b`` over every arena leaf (pred: scalar bool, traced ok).
+
+    The workhorse of conditional writes (kv_set/kv_delete) and of masking
+    padded requests out of batched folds (see faas.compile_batched_handler).
+    """
+    pred = jnp.asarray(pred)
+
+    def sel(x, y):
+        p = pred.reshape((1,) * x.ndim) if x.ndim else pred
+        return jnp.where(p, x, y)
+
+    return jax.tree.map(sel, a, b)
+
+
 # ---------------------------------------------------------------------------
 # Single-key ops
 # ---------------------------------------------------------------------------
@@ -98,10 +113,7 @@ def kv_set(store: Store, key_hash, value_row, length, clock, node_id
             vv=s.vv.at[node_id].max(new_clock),
         )
 
-    new_store = jax.tree.map(
-        lambda a, b: jnp.where(
-            write.reshape((1,) * a.ndim), b, a) if a.ndim else jnp.where(write, b, a),
-        store, apply(store))
+    new_store = store_select(write, apply(store), store)
     return new_store, jnp.where(write, new_clock, clock), write
 
 
@@ -121,10 +133,7 @@ def kv_delete(store: Store, key_hash, clock, node_id) -> Tuple[Store, jnp.ndarra
             vv=s.vv.at[node_id].max(new_clock),
         )
 
-    new_store = jax.tree.map(
-        lambda a, b: jnp.where(
-            found.reshape((1,) * a.ndim), b, a) if a.ndim else jnp.where(found, b, a),
-        store, apply(store))
+    new_store = store_select(found, apply(store), store)
     return new_store, jnp.where(found, new_clock, clock), found
 
 
@@ -135,6 +144,27 @@ def kv_scan(store: Store, key_hashes) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.nda
         return v, l, f
 
     return jax.vmap(one)(jnp.asarray(key_hashes, jnp.int32))
+
+
+def kv_set_fold(store: Store, key_hashes, rows, lengths, clock, node_id
+                ) -> Tuple[Store, jnp.ndarray, jnp.ndarray]:
+    """Batched upsert: the sequential fold of N ``kv_set``s as ONE traced op.
+
+    ``jax.lax.scan`` threads (store, clock) through the writes in order, so
+    per-key last-writer-wins, version stamping, and the final clock match N
+    separate ``kv_set`` calls exactly — while the device sees a single
+    dispatch instead of N round-trips.  Returns (store', clock', oks (B,)).
+    """
+    def step(carry, inp):
+        s, c = carry
+        h, row, ln = inp
+        s2, c2, ok = kv_set(s, h, row, ln, c, node_id)
+        return (s2, c2), ok
+
+    xs = (jnp.asarray(key_hashes, jnp.int32), rows,
+          jnp.asarray(lengths, jnp.int32))
+    (new_store, new_clock), oks = jax.lax.scan(step, (store, clock), xs)
+    return new_store, new_clock, oks
 
 
 # ---------------------------------------------------------------------------

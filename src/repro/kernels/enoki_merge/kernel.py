@@ -46,6 +46,8 @@ def enoki_merge_rows(a_val, a_ver, b_val, b_ver, *, rows_tile: int = 256,
     ver_spec = pl.BlockSpec((rt,), lambda i: (i,))
     from jax.experimental.pallas import tpu as pltpu
 
+    # jax renamed TPUCompilerParams -> CompilerParams across versions
+    params_cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
     return pl.pallas_call(
         _merge_kernel,
         grid=grid,
@@ -53,7 +55,7 @@ def enoki_merge_rows(a_val, a_ver, b_val, b_ver, *, rows_tile: int = 256,
         out_specs=[val_spec, ver_spec],
         out_shape=[jax.ShapeDtypeStruct((R, V), a_val.dtype),
                    jax.ShapeDtypeStruct((R,), a_ver.dtype)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=params_cls(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(a_val, a_ver, b_val, b_ver)

@@ -301,7 +301,8 @@ def make_replicate_step(arch: ArchConfig, mesh: Mesh,
                     deq = qs.astype(jnp.float32) * ss.reshape(
                         (n_pods,) + (1,) * d.ndim)
                     return deq.mean(axis=0)
-                return jax.shard_map(
+                from repro.parallel.sharding import shard_map_compat
+                return shard_map_compat(
                     body, mesh=mesh,
                     in_specs=(P(), P("pod")), out_specs=P(),
                     check_vma=False, axis_names={"pod"})(o, l)

@@ -188,7 +188,8 @@ def moe_apply_ep(params: dict, x: jnp.ndarray, arch: ArchConfig, mesh,
             (yb * w_by_slot[:, None]).astype(xt_l.dtype), mode="drop")
         return jax.lax.psum(y, "model")
 
-    y = jax.shard_map(
+    from repro.parallel.sharding import shard_map_compat
+    y = shard_map_compat(
         body, mesh=mesh,
         in_specs=(P("data", None), P("data", None), P("data", None),
                   P("model", None, None), P("model", None, None),

@@ -37,9 +37,8 @@ def degraded_mesh_config(cfg: MeshConfig, alive_pods: int) -> MeshConfig:
 
 
 def make_mesh(cfg: MeshConfig) -> Mesh:
-    return jax.make_mesh(cfg.shape, cfg.axes,
-                         axis_types=(jax.sharding.AxisType.Auto,)
-                         * len(cfg.axes))
+    from repro.launch.mesh import make_mesh_compat
+    return make_mesh_compat(cfg.shape, cfg.axes)
 
 
 def remesh(state: Any, old_specs: Any, new_mesh: Mesh) -> Any:

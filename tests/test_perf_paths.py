@@ -20,8 +20,8 @@ SCRIPT = textwrap.dedent("""
                                         blockwise_attention, qscan_attention,
                                         reference_attention)
 
-    mesh = jax.make_mesh((2, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_test_mesh
+    mesh = make_test_mesh((2, 2), ("data", "model"))
 
     # --- EP MoE == auto MoE (values + gradients) --------------------------
     arch = reduced(get_arch("kimi-k2-1t-a32b"))

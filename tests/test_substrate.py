@@ -32,11 +32,11 @@ def test_serializer_roundtrip():
 
 def test_serializer_integrity_check():
     from repro.checkpoint import deserialize_tree, serialize_tree
-    import zstandard
+    from repro.checkpoint.serializer import compress_bytes, decompress_bytes
     blob = serialize_tree(_tree())
-    raw = bytearray(zstandard.ZstdDecompressor().decompress(blob))
+    raw = bytearray(decompress_bytes(blob))
     raw[len(raw) // 2] ^= 0xFF
-    corrupted = zstandard.ZstdCompressor().compress(bytes(raw))
+    corrupted = compress_bytes(bytes(raw))
     with pytest.raises(Exception):
         deserialize_tree(corrupted, _tree())
 
@@ -56,8 +56,8 @@ def test_manager_save_restore_retention(tmp_path):
 
 def test_manager_restore_with_resharding(tmp_path):
     from repro.checkpoint import CheckpointManager
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_test_mesh
+    mesh = make_test_mesh((1,), ("data",))
     from jax.sharding import NamedSharding, PartitionSpec as P
     mgr = CheckpointManager(str(tmp_path))
     t = {"w": jnp.ones((4, 4))}
