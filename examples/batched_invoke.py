@@ -8,7 +8,9 @@ then compares:
      device dispatch each — the §4.2 bottleneck), vs
   2. one ``Cluster.invoke_batch`` of the same 256 requests (scan-folded
      store update, per-request emulated network), vs
-  3. the ``submit``/``flush`` coalescing API that independent callers use.
+  3. the ``submit``/``flush`` coalescing API that independent callers use,
+  4. the background flusher: ``window_ms`` arrival-time windows drained by
+     ``pump`` across TWO nodes in one flush cycle (cross-node fan-out).
 
 Run:  PYTHONPATH=src python examples/batched_invoke.py
 """
@@ -73,6 +75,21 @@ def main():
     results = cluster3.engine.flush()    # one batch per (fn, node) group
     print(f"flush() served {len(results)} queued requests; "
           f"last total = {float(np.asarray(results[tickets[-1]].output)[0])}")
+
+    # -- background flusher: windows + pump, fanned out across two nodes ----
+    engine = cluster3.engine.configure(window_ms=8.0, max_batch=64)
+    tickets = [engine.submit("accumulate", "edge" if i % 2 == 0 else "edge2",
+                             np.full(16, 1.0, np.float32), t_send=i * 0.5)
+               for i in range(64)]          # 2 req/ms split across 2 nodes
+    before = engine.stats.windows_flushed
+    served = engine.pump(100.0)             # drains every due window
+    st = engine.stats
+    print(f"pump() served {len(served)} requests in "
+          f"{st.windows_flushed - before} windows across 2 nodes "
+          f"(deadline flushes: {st.deadline_flushes})")
+    # a windowed request waits at most window_ms past its solo latency
+    print(f"windowed response_ms: {served[tickets[0]].response_ms:.2f} "
+          f"(window 8.0 ms)")
 
 
 if __name__ == "__main__":

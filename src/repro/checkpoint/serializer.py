@@ -36,12 +36,27 @@ def compress_bytes(data: bytes, level: int = 3) -> bytes:
 
 
 def decompress_bytes(blob: bytes) -> bytes:
+    """Inverse of ``compress_bytes``; raises ``IOError`` on a corrupted blob.
+
+    A blob whose zstd magic bytes are corrupted falls through the sniff to
+    the zlib branch and a truncated frame fails inside either decompressor —
+    both are checkpoint corruption, not programming errors, so they surface
+    as the same ``IOError`` family as the sha256 integrity check instead of
+    a raw ``zlib.error``/``ZstdError``."""
     if blob[:4] == _ZSTD_MAGIC:
         if zstandard is None:
             raise IOError("blob is zstd-compressed but zstandard is not "
                           "installed; re-save with zlib or install zstandard")
-        return zstandard.ZstdDecompressor().decompress(blob)
-    return zlib.decompress(blob)
+        try:
+            return zstandard.ZstdDecompressor().decompress(blob)
+        except Exception as e:
+            raise IOError(f"checkpoint blob corrupted: zstd frame failed to "
+                          f"decompress ({e})") from e
+    try:
+        return zlib.decompress(blob)
+    except zlib.error as e:
+        raise IOError(f"checkpoint blob corrupted: not a valid zstd or zlib "
+                      f"frame ({e})") from e
 
 
 def _path_str(path) -> str:

@@ -10,12 +10,12 @@ Layers (DESIGN.md §3):
 """
 from repro.core.cluster import Cluster, InvokeResult
 from repro.core.consistency import Session
-from repro.core.engine import BatchedInvocationEngine
+from repro.core.engine import BatchedInvocationEngine, EngineStats
 from repro.core.crdt import (GCounter, LWWRegister, PNCounter, gcounter_merge,
                              lww_merge, pncounter_merge, vv_merge)
 from repro.core.faas import (KV, FunctionSpec, VectorCodec,
                              compile_batched_handler, enoki_function,
-                             get_function, registry)
+                             get_function, handler_read_only, registry)
 from repro.core.keygroup import KeygroupSpec, TensorKeygroup
 from repro.core.naming import NamingService
 from repro.core.network import NetworkModel, paper_topology
@@ -31,10 +31,10 @@ from repro.core.versioning import fnv1a
 
 __all__ = [
     "Cluster", "InvokeResult", "Session", "BatchedInvocationEngine",
-    "GCounter", "LWWRegister",
+    "EngineStats", "GCounter", "LWWRegister",
     "PNCounter", "gcounter_merge", "lww_merge", "pncounter_merge", "vv_merge",
     "KV", "FunctionSpec", "VectorCodec", "compile_batched_handler",
-    "enoki_function", "get_function",
+    "enoki_function", "get_function", "handler_read_only",
     "registry", "KeygroupSpec", "TensorKeygroup", "NamingService",
     "NetworkModel", "paper_topology", "anti_entropy_round", "converge",
     "make_pod_replicate_step", "replicate_pod_axis", "Router", "WriteLog",

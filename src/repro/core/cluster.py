@@ -184,15 +184,24 @@ class Cluster:
 
     # --------------------------------------------------------------- timeline
     def _deliver_until(self, node: str, t: float) -> None:
-        """Apply all replication deliveries for ``node`` with arrival <= t."""
-        keep = []
+        """Apply all replication deliveries for ``node`` with arrival <= t,
+        in (arrival, seq) order — network delivery order, so a later snapshot
+        is always merged after an earlier one regardless of how the pending
+        heap happens to be laid out."""
+        due, keep = [], []
         for ev in self._events:
             arrival, _, kg, target, snapshot = ev
             if target == node and arrival <= t:
-                nd = self.nodes[node]
-                nd.stores[kg] = merge_stores(nd.stores[kg], snapshot)
+                due.append(ev)
             else:
                 keep.append(ev)
+        if not due:
+            return
+        nd = self.nodes[node]
+        for arrival, _, kg, target, snapshot in sorted(due, key=lambda e: e[:2]):
+            nd.stores[kg] = merge_stores(nd.stores[kg], snapshot)
+        # the filtered keep-list is no longer a valid heap for later heappush
+        heapq.heapify(keep)
         self._events = keep
 
     def _schedule_replication(self, kg: str, source: str, t_apply: float) -> None:
@@ -310,12 +319,13 @@ class Cluster:
         invoked function itself, store-update semantics match len(xs)
         sequential ``invoke`` calls exactly (scan-fold, last-writer-wins,
         identical clocks).  Downstream call chains follow the engine's
-        coalescing model instead: callees run after their whole caller
-        CHUNK (batches fold chunk-by-chunk at the largest bucket, 256 by
-        default), so a callee that reads state its caller writes sees the
-        post-chunk value, not its own request's prefix (see core/engine.py and
-        docs/batched_engine.md for this and the replication-coalescing
-        trade-off).  Returns per-request InvokeResults in input order;
+        flush-cycle model instead: callees run after the caller chunks of
+        the cycle (chunks cap at the largest bucket, 256 by default) and
+        coalesce per callee ACROSS chunks, so a callee that reads state its
+        caller writes sees the post-chunk value, not its own request's
+        prefix (see core/engine.py and docs/batched_engine.md for this and
+        the replication-coalescing trade-off).  Returns per-request
+        InvokeResults in input order;
         ``output`` holds host numpy rows (the batch is materialised once),
         unlike ``invoke``'s lazy device arrays.
         """
@@ -333,6 +343,16 @@ class Cluster:
         out = [(c, False) for c in spec.calls if fire]
         out += [(c, True) for c in spec.async_calls]
         return out
+
+    def is_read_only(self, fn_name: str) -> bool:
+        """Whether ``fn_name``'s deploy-time op trace is free of mutating
+        store ops (the flag ``faas.compile_handler`` derives; identical at
+        every deployment since the trace is static)."""
+        for n in self.naming.deployments_of(fn_name):
+            h = self.nodes[n].handlers.get(fn_name)
+            if h is not None:
+                return bool(getattr(h, "read_only", False))
+        raise KeyError(f"{fn_name} not deployed anywhere")
 
     def _nearest_deployment(self, fn_name: str, from_node: str) -> str:
         nodes = self.naming.deployments_of(fn_name)

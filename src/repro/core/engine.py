@@ -13,33 +13,62 @@ calls exactly.
 The emulated network stays PER-REQUEST: each request keeps its own
 ``t_send``/arrival/response timeline, the same client→node link charges, and
 the same per-op round-trip charges for remote placements — only the compute
-dispatch is shared.  Timing semantics vs N sequential invokes:
+dispatch is shared.
 
-* replication deliveries are folded in up to the LATEST arrival in the
-  batch (a coalesced batch executes once its last member has arrived);
-* asynchronous replication of a written keygroup is scheduled ONCE, with
-  the post-batch snapshot, at the last writer's apply time — peers converge
-  to the same contents as N per-invoke snapshots (LWW), with N× fewer
-  replication messages and bytes (coalesced anti-entropy);
-* downstream calls fire after each chunk's main dispatch (chunks cap at
-  the largest bucket) and are themselves batched per callee.
-
-Two APIs:
+Three APIs:
 
 * ``engine.dispatch(fn, node, xs, t_sends, ...)`` — explicit batch, results
   in request order (what ``Cluster.invoke_batch`` delegates to);
 * ``engine.submit(...)`` / ``engine.flush()`` — enqueue requests one at a
-  time from independent callers; ``flush`` groups them by
-  ``(function, node, client)`` and dispatches each group as one batch,
-  returning results in submission order.
+  time from independent callers; ``flush`` drains everything queued in ONE
+  flush cycle and returns results keyed by ticket;
+* ``engine.submit(...)`` / ``engine.pump(until_t)`` with ``window_ms`` set —
+  the background-flusher model: each ``(function, node, client)`` group
+  accumulates into an arrival-time WINDOW that closes ``window_ms`` of
+  virtual time after its first request arrives (or immediately, when it
+  fills to ``max_batch`` — full buckets flush early); ``pump(until_t)``
+  drains every window whose deadline has passed.  A request therefore never
+  waits past ``window_ms``, and requests flushed at the deadline are charged
+  the wait (their ``t_applied`` anchors at the window close, the batched
+  analogue of a real coalescing server's arrival-time batching).
+
+A flush cycle dispatches its per-``(fn, node)`` groups as INDEPENDENT
+PARALLEL TIMELINES (§4.3's multi-node picture):
+
+* replication deliveries fold in up to a shared high-water mark per store
+  node — the latest arrival any group of the cycle brings to that node —
+  before any group executes, so groups never observe a half-delivered peer;
+* writes of the cycle schedule ONE coalesced replication snapshot per
+  written keygroup per store node (post-cycle contents, latest apply time),
+  instead of one snapshot per group;
+* groups of the same cycle do NOT see each other's same-cycle writes via
+  replication (parallel timelines): cross-group visibility starts at the
+  next cycle, exactly like concurrent batches on distinct real nodes;
+* downstream calls coalesce ACROSS caller chunks: every caller chunk of the
+  cycle that fires the same ``(callee, target node)`` from the same CALLER
+  NODE contributes its requests to one merged batch per wave (callers on
+  different nodes keep separate batches — they pay different hops), so a
+  fan-in callee (fig 8) is dispatched once per caller node per cycle
+  instead of once per caller function/chunk.
 
 Batches are padded up to bucket sizes (default 1/8/64/256) so jit traces a
 bounded set of shapes; padded slots are masked out of the fold and oversize
 batches are folded chunk-by-chunk at the largest bucket.
+
+Failure contract (at-most-once): the queue (all windows for ``flush``, due
+windows for ``pump``) is validated BEFORE anything dispatches — an
+undeployed function/node raises KeyError with every window left intact.  If
+a dispatch itself raises mid-cycle, the FAILING group is dropped, not
+requeued — its store effects may already have committed; windows that never
+started dispatching go back on the queue, and results of groups that
+completed cleanly are retained and returned by the NEXT ``flush``/``pump``.
+``discard(ticket)``/``pending()`` are the public queue-surgery API for
+recovering from a poisoned request (see docs/batched_engine.md).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -50,109 +79,442 @@ DEFAULT_BUCKETS = (1, 8, 64, 256)
 MAX_CALL_DEPTH = 32     # downstream-chain guard (cycles in calls/async_calls)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)        # identity semantics: ps hold arrays
 class _Pending:
     ticket: int
     fn: str
     node: str
     x: Any
     t_send: float
+    t_arrive: float
     client: str
     payload_bytes: int
 
 
+@dataclasses.dataclass(eq=False)        # identity semantics for in/remove
+class _Window:
+    """One open arrival-time window of a (fn, node, client, payload) group."""
+    key: Tuple[str, str, str, int]
+    deadline: float                 # inf when window_ms is None
+    ps: List[_Pending] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class _Cycle:
+    """Per-flush-cycle shared state (parallel-timeline bookkeeping)."""
+    hwm: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # (kg, store_node) -> latest apply time of a write this cycle
+    repl: Dict[Tuple[str, str], float] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class _Frame:
+    """One dispatched chunk-batch inside a cycle, plus its downstream state.
+
+    ``chains``/``t_downs`` mutate as subframes finalize; ``results`` is set
+    once the frame itself finalizes (todo drained, no outstanding slots).
+    """
+    fn: str
+    node: str
+    client: str
+    payload_bytes: int
+    depth: int
+    t_sends: List[float]
+    hop_ms: float
+    outputs: List[Any]
+    t_applieds: List[float]
+    chains: List[List[str]]
+    t_downs: List[float]
+    ops: List[Tuple[str, int]]
+    todo: List[Tuple[str, bool]]                    # remaining (callee, async)
+    fires: List[bool]                               # sync-downstream gate
+    parents: List[Optional[Tuple["_Frame", int, bool]]]
+    outstanding: int = 0
+    results: Optional[List[Any]] = None
+
+    @property
+    def n(self) -> int:
+        return len(self.t_sends)
+
+
+@dataclasses.dataclass
+class EngineStats:
+    submitted: int = 0
+    cycles: int = 0
+    windows_flushed: int = 0
+    requests_flushed: int = 0
+    auto_flushes: int = 0           # windows that filled to max_batch
+    deadline_flushes: int = 0       # windows drained by pump at their deadline
+    dispatches: int = 0             # device-level chunk dispatches (all waves)
+    downstream_coalesced: int = 0   # downstream requests that rode a batch
+                                    # merged across >1 caller frame
+    replication_coalesced: int = 0  # per-group snapshots saved by cycle
+                                    # coalescing
+
+
 class BatchedInvocationEngine:
-    def __init__(self, cluster, bucket_sizes: Sequence[int] = DEFAULT_BUCKETS):
+    def __init__(self, cluster, bucket_sizes: Sequence[int] = DEFAULT_BUCKETS,
+                 window_ms: Optional[float] = None,
+                 max_batch: Optional[int] = None):
         self.cluster = cluster
         self.buckets = tuple(sorted(set(int(b) for b in bucket_sizes)))
-        self._queue: List[_Pending] = []
+        self.window_ms = window_ms
+        self.max_batch = max_batch
+        self.stats = EngineStats()
+        self._windows: List[_Window] = []
         self._tickets = 0
-        # results of groups that dispatched before a later group's dispatch
-        # raised mid-flush; delivered by the next flush()
-        self._undelivered: Dict[int, Any] = {}
+        # results awaiting pickup: auto-flushed windows, plus groups that
+        # dispatched cleanly before a later group raised mid-cycle
+        self._ready: Dict[int, Any] = {}
+        # the network model is static, so the client->node hop of a
+        # (client, node, payload) triple is a constant: cache it (submit is
+        # the per-request hot path of the background flusher)
+        self._hops: Dict[Tuple[str, str, int], float] = {}
+
+    def _hop_ms(self, client: str, node: str, payload_bytes: int) -> float:
+        key = (client, node, payload_bytes)
+        hop = self._hops.get(key)
+        if hop is None:
+            link = self.cluster.net.link(client, node)
+            hop = (self.cluster.net.one_way_ms(client, node)
+                   + link.transfer_ms(payload_bytes))
+            self._hops[key] = hop
+        return hop
+
+    def configure(self, window_ms: Optional[float] = None,
+                  max_batch: Optional[int] = None) -> "BatchedInvocationEngine":
+        """Set the background-flusher knobs (chainable).  ``window_ms`` is
+        the arrival-time window in virtual ms; ``max_batch`` caps a window
+        and triggers flush-on-full."""
+        if window_ms is not None and window_ms < 0:
+            raise ValueError("window_ms must be >= 0")
+        if max_batch is not None and max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.window_ms = window_ms
+        self.max_batch = max_batch
+        return self
 
     # ------------------------------------------------------------- coalescing
     def submit(self, fn: str, node: str, x, t_send: float = 0.0,
                client: str = "client", payload_bytes: int = 64) -> int:
-        """Enqueue one invocation; returns a ticket redeemed by ``flush``."""
+        """Enqueue one invocation; returns a ticket redeemed by ``flush`` or
+        ``pump``.  With ``window_ms`` set, the request joins its group's open
+        window (or opens a new one closing ``window_ms`` after this
+        request's arrival); a window that fills to ``max_batch`` dispatches
+        immediately (flush-on-full) and its results await the next
+        ``pump``/``flush``."""
         t = self._tickets
         self._tickets += 1
-        self._queue.append(_Pending(t, fn, node, x, t_send, client,
-                                    payload_bytes))
+        self.stats.submitted += 1
+        t_arrive = t_send + self._hop_ms(client, node, payload_bytes)
+        p = _Pending(t, fn, node, x, t_send, t_arrive, client, payload_bytes)
+        key = (fn, node, client, payload_bytes)
+        w = self._open_window(key, t_arrive)
+        w.ps.append(p)
+        if self.max_batch is not None and len(w.ps) >= self.max_batch:
+            # full bucket flushes early: the batch executes when its last
+            # member arrives, no deadline wait.  Validate BEFORE taking the
+            # window off the queue so a KeyError really does leave it intact
+            self._validate([w])
+            self._windows.remove(w)
+            self.stats.auto_flushes += 1
+            self._ready.update(self._run_cycle([w], [None]))
         return t
 
+    def _open_window(self, key: Tuple, t_arrive: float) -> _Window:
+        for w in self._windows:
+            # joinable iff this request makes the close (t_arrive <=
+            # deadline) AND the close is within window_ms of ITS arrival —
+            # an out-of-order early request must not inherit a later
+            # opener's deadline and wait past window_ms
+            if (w.key == key and t_arrive <= w.deadline
+                    and (self.window_ms is None
+                         or w.deadline <= t_arrive + self.window_ms)
+                    and (self.max_batch is None
+                         or len(w.ps) < self.max_batch)):
+                return w
+        deadline = (math.inf if self.window_ms is None
+                    else t_arrive + self.window_ms)
+        w = _Window(key=key, deadline=deadline)
+        self._windows.append(w)
+        return w
+
+    def hold_results(self, results: Dict[int, Any]) -> None:
+        """Put already-redeemed results back for a later ``pump``/``flush``
+        pickup.  Routers draining the shared engine use this to hand back
+        tickets they do not own (another router's submissions)."""
+        self._ready.update(results)
+
+    def pending(self) -> List[Dict[str, Any]]:
+        """Read-only view of queued requests (public replacement for poking
+        ``_queue``): one dict per request with ticket/fn/node/client/t_send
+        and the window deadline it is waiting on."""
+        out = []
+        for w in self._windows:
+            for p in w.ps:
+                out.append({"ticket": p.ticket, "fn": p.fn, "node": p.node,
+                            "client": p.client, "t_send": p.t_send,
+                            "deadline": w.deadline})
+        return out
+
+    def discard(self, ticket: int) -> bool:
+        """Drop a queued request (e.g. a poisoned one after a failed flush)
+        without dispatching it.  Returns whether the ticket was queued."""
+        for w in self._windows:
+            for p in w.ps:
+                if p.ticket == ticket:
+                    w.ps.remove(p)
+                    if not w.ps:
+                        self._windows.remove(w)
+                    return True
+        return False
+
+    def _validate(self, windows: Sequence[_Window]) -> None:
+        for w in windows:
+            for p in w.ps:
+                nd = self.cluster.nodes.get(p.node)
+                if (p.fn not in self.cluster.specs or nd is None
+                        or p.fn not in nd.batched_handlers):
+                    raise KeyError(
+                        f"cannot flush: function {p.fn!r} is not deployed at "
+                        f"node {p.node!r} (queue left intact)")
+
     def flush(self) -> Dict[int, Any]:
-        """Dispatch everything queued, one batch per (fn, node, client,
-        payload) group, and return {ticket: InvokeResult}.
+        """Dispatch everything queued — deadlines ignored — as one flush
+        cycle, and return ``{ticket: InvokeResult}`` (plus any results held
+        over from auto-flushed windows or a previously failed cycle).
 
-        Coalescing is per group: submission order is preserved WITHIN a
-        group, but one group's whole batch executes before the next — so
-        requests of *different* functions sharing a keygroup may observe
-        each other's writes in group order rather than submission order
-        (the usual trade of a coalescing server).  Callers needing strict
-        cross-function ordering should flush between submissions.
+        Coalescing is per ``(fn, node, client)`` group: submission order is
+        preserved WITHIN a group, and groups of the cycle run as parallel
+        timelines (see module docstring) — requests of *different* functions
+        sharing a keygroup may observe each other's writes in group order
+        rather than submission order (the usual trade of a coalescing
+        server).  Callers needing strict cross-function ordering should
+        flush between submissions."""
+        self._validate(self._windows)
+        windows, self._windows = self._windows, []
+        cycle_out = (self._run_cycle(windows, [None] * len(windows))
+                     if windows else {})
+        # held-over results are only consumed on a clean cycle (a raising
+        # cycle stashes its own partial results into _ready instead)
+        out = dict(self._ready)
+        out.update(cycle_out)
+        self._ready = {}
+        return out
 
-        The queue is validated BEFORE anything dispatches: an undeployed
-        function/node raises KeyError with the whole queue left intact (no
-        partial side effects, no lost tickets).  If a dispatch itself then
-        raises mid-flush: the FAILING group is dropped, not requeued — its
-        store effects may already have committed (e.g. a later chunk or an
-        undeployed downstream callee failed), so re-running it would apply
-        writes twice; at-most-once is the contract for a failing group.
-        Every not-yet-dispatched group goes back on the queue, and results
-        of groups that already dispatched cleanly are retained and returned
-        by the NEXT flush."""
-        for p in self._queue:
-            nd = self.cluster.nodes.get(p.node)
-            if (p.fn not in self.cluster.specs or nd is None
-                    or p.fn not in nd.batched_handlers):
-                raise KeyError(
-                    f"cannot flush: function {p.fn!r} is not deployed at "
-                    f"node {p.node!r} (queue left intact)")
-        groups: Dict[Tuple, List[_Pending]] = {}
-        for p in self._queue:
-            groups.setdefault((p.fn, p.node, p.client, p.payload_bytes),
-                              []).append(p)
-        self._queue = []
-        out: Dict[int, Any] = dict(self._undelivered)
-        self._undelivered = {}
-        items = list(groups.items())
-        for gi, ((fn, node, client, payload), ps) in enumerate(items):
-            try:
-                results = self.dispatch(fn, node, [p.x for p in ps],
-                                        [p.t_send for p in ps], client=client,
-                                        payload_bytes=payload)
-            except Exception:
-                # requeue only groups that never dispatched; the failing
-                # group's effects may have partially committed (at-most-once)
-                for _, rest in items[gi + 1:]:
-                    self._queue.extend(rest)
-                self._undelivered = out
-                raise
-            for p, r in zip(ps, results):
-                out[p.ticket] = r
+    def pump(self, until_t: float = math.inf) -> Dict[int, Any]:
+        """Advance the background flusher to virtual time ``until_t``: every
+        window whose deadline has passed dispatches, all due windows in ONE
+        flush cycle.  Requests flushed here are charged the wait until their
+        window's close.  Returns ``{ticket: InvokeResult}`` for everything
+        that completed (including earlier flush-on-full results)."""
+        due = [w for w in self._windows if w.deadline <= until_t]
+        self._validate(due)
+        cycle_out = {}
+        if due:
+            self._windows = [w for w in self._windows if w not in due]
+            self.stats.deadline_flushes += len(due)
+            floors = [w.deadline if math.isfinite(w.deadline) else None
+                      for w in due]
+            cycle_out = self._run_cycle(due, floors)
+        out = dict(self._ready)
+        out.update(cycle_out)
+        self._ready = {}
         return out
 
     # --------------------------------------------------------------- dispatch
     def dispatch(self, fn_name: str, node: str, xs: Sequence,
                  t_sends: Optional[Sequence[float]] = None,
-                 client: str = "client", payload_bytes: int = 64,
-                 _depth: int = 0) -> List[Any]:
+                 client: str = "client", payload_bytes: int = 64) -> List[Any]:
         """Invoke ``fn_name`` at ``node`` for every input in ``xs`` with one
         device dispatch per chunk.  Returns per-request InvokeResults in
-        input order."""
+        input order.  (One explicit batch == a single-window flush cycle.)"""
         n = len(xs)
         if t_sends is None:
             t_sends = [0.0] * n
         if len(t_sends) != n:
             raise ValueError(f"{n} inputs but {len(t_sends)} send times")
+        w = _Window(key=(fn_name, node, client, payload_bytes),
+                    deadline=math.inf)
+        hop = self._hop_ms(client, node, payload_bytes)
+        for i, (x, t) in enumerate(zip(xs, t_sends)):
+            w.ps.append(_Pending(i, fn_name, node, x, t, t + hop, client,
+                                 payload_bytes))
+        by_ticket = self._run_cycle([w], [None])
+        return [by_ticket[i] for i in range(n)]
+
+    # ------------------------------------------------------------ flush cycle
+    def _run_cycle(self, windows: Sequence[_Window],
+                   floors: Sequence[Optional[float]]) -> Dict[int, Any]:
+        """Dispatch ``windows`` as one cycle of parallel per-(fn, node)
+        timelines and return {ticket: InvokeResult}."""
+        c = self.cluster
+        self.stats.cycles += 1
+        cycle = _Cycle()
+        # shared deliver high-water mark: the latest arrival any group of
+        # this cycle brings to each store node (the cycle executes once its
+        # last member has arrived)
+        for w, floor in zip(windows, floors):
+            fn, node, _, _ = w.key
+            kg, store_node, _ = c._resolve_placement(c.specs[fn], node)
+            if kg is None:
+                continue
+            hi = max(max(p.t_arrive for p in w.ps), floor or -math.inf)
+            cycle.hwm[store_node] = max(cycle.hwm.get(store_node, -math.inf),
+                                        hi)
+
+        frames: List[_Frame] = []
+        top: List[Tuple[_Window, List[_Frame]]] = []
+        err: Optional[BaseException] = None
+        for wi, (w, floor) in enumerate(zip(windows, floors)):
+            fn, node, client, payload = w.key
+            try:
+                fs = self._exec_group(
+                    fn, node, [p.x for p in w.ps], [p.t_send for p in w.ps],
+                    client, payload, floor, cycle, depth=0,
+                    parents=[None] * len(w.ps))
+            except Exception as e:
+                # the failing window is dropped (its effects may have
+                # partially committed: at-most-once); windows that never
+                # started dispatching go back on the queue
+                err = e
+                self._windows.extend(windows[wi + 1:])
+                break
+            top.append((w, fs))
+            frames.extend(fs)
+
+        try:
+            self._run_downstream_waves(frames, cycle)
+        except Exception as e:
+            if err is None:
+                err = e
+
+        # one coalesced replication snapshot per written keygroup per node,
+        # with the post-cycle contents at the latest apply time
+        for (kg, store_node), t_apply in cycle.repl.items():
+            c._schedule_replication(kg, store_node, t_apply)
+
+        out: Dict[int, Any] = {}
+        for w, fs in top:
+            rs: List[Any] = []
+            for f in fs:
+                if f.results is None:       # unfinalized under err: lost
+                    rs = None
+                    break
+                rs.extend(f.results)
+            if rs is None:
+                continue
+            self.stats.windows_flushed += 1
+            self.stats.requests_flushed += len(w.ps)
+            for p, r in zip(w.ps, rs):
+                out[p.ticket] = r
+        if err is not None:
+            self._ready.update(out)
+            raise err
+        return out
+
+    def _run_downstream_waves(self, frames: List[_Frame],
+                              cycle: _Cycle) -> None:
+        """Drive every frame's downstream chain to completion, coalescing
+        same-``(callee, target)`` requests across caller frames per wave."""
+        c = self.cluster
+        while True:
+            finalized = self._finalize_ready(frames)
+            # fire the next callee of each unblocked frame; requests to the
+            # same (callee, target, caller-node, payload) merge into one batch
+            reqs: Dict[Tuple, List[Tuple[Any, float, Tuple]]] = {}
+            popped = False
+            for f in frames:
+                if f.results is not None or f.outstanding:
+                    continue
+                while f.todo:
+                    callee, is_async = f.todo[0]
+                    idxs = (list(range(f.n)) if is_async
+                            else [i for i in range(f.n) if f.fires[i]])
+                    if not idxs:
+                        f.todo.pop(0)       # nobody fires: skip this callee
+                        popped = True
+                        continue
+                    f.todo.pop(0)
+                    popped = True
+                    target = c._nearest_deployment(callee, f.node)
+                    lst = reqs.setdefault(
+                        (callee, target, f.node, f.payload_bytes), [])
+                    for i in idxs:
+                        lst.append((f.outputs[i], f.t_downs[i],
+                                    (f, i, is_async)))
+                    f.outstanding = len(idxs)
+                    break                   # one callee per frame per wave
+            if reqs:
+                for (callee, target, caller, payload), lst in reqs.items():
+                    callers = {id(slot[0]) for _, _, slot in lst}
+                    if len(callers) > 1:
+                        self.stats.downstream_coalesced += len(lst)
+                    depth = 1 + max(slot[0].depth for _, _, slot in lst)
+                    frames.extend(self._exec_group(
+                        callee, target, [x for x, _, _ in lst],
+                        [t for _, t, _ in lst], caller, payload, floor=None,
+                        cycle=cycle, depth=depth,
+                        parents=[slot for _, _, slot in lst]))
+                continue
+            # no fires this round: a frame may still have drained its todo
+            # by skipping (all callees filtered) — loop once more so the
+            # finalize pass picks it up; stop when nothing moves at all
+            if not finalized and not popped:
+                break
+        stuck = [f for f in frames if f.results is None]
+        if stuck:
+            raise RuntimeError(
+                f"flush cycle deadlocked with {len(stuck)} unfinalized "
+                f"frames (first: {stuck[0].fn!r}) — engine invariant bug")
+
+    def _finalize_ready(self, frames: List[_Frame]) -> bool:
+        """Finalize every frame with no remaining work, cascading upward
+        (finalizing a subframe may unblock and finalize its parent).
+        Returns whether anything finalized."""
+        any_final = False
+        progressed = True
+        while progressed:
+            progressed = False
+            for f in frames:
+                if f.results is None and not f.todo and f.outstanding == 0:
+                    self._finalize(f)
+                    progressed = any_final = True
+        return any_final
+
+    def _finalize(self, f: _Frame) -> None:
+        from repro.core.cluster import InvokeResult
+        results = []
+        for i in range(f.n):
+            t_done = max(f.t_applieds[i], f.t_downs[i])
+            t_received = t_done + f.hop_ms
+            results.append(InvokeResult(
+                output=f.outputs[i], response_ms=t_received - f.t_sends[i],
+                t_sent=f.t_sends[i], t_received=t_received,
+                t_applied=f.t_applieds[i], kv_ops=list(f.ops), node=f.node,
+                chain=f.chains[i]))
+        f.results = results
+        for i, par in enumerate(f.parents):
+            if par is None:
+                continue
+            pf, pi, is_async = par
+            pf.chains[pi].extend(f.chains[i])
+            if not is_async:
+                pf.t_downs[pi] = results[i].t_received
+            pf.outstanding -= 1
+
+    # ----------------------------------------------------------- batch exec
+    def _exec_group(self, fn_name: str, node: str, xs: Sequence,
+                    t_sends: Sequence[float], client: str, payload_bytes: int,
+                    floor: Optional[float], cycle: _Cycle, depth: int,
+                    parents: Sequence) -> List[_Frame]:
         cap = self.buckets[-1]
-        results: List[Any] = []
-        for lo in range(0, n, cap):
-            results.extend(self._dispatch_chunk(
-                fn_name, node, xs[lo:lo + cap], t_sends[lo:lo + cap],
-                client, payload_bytes, _depth))
-        return results
+        frames = []
+        for lo in range(0, len(xs), cap):
+            frames.append(self._exec_chunk(
+                fn_name, node, xs[lo:lo + cap], t_sends[lo:lo + cap], client,
+                payload_bytes, floor, cycle, depth, parents[lo:lo + cap]))
+        return frames
 
     def _bucket(self, n: int) -> int:
         for b in self.buckets:
@@ -160,9 +522,12 @@ class BatchedInvocationEngine:
                 return b
         return n  # chunking caps n at the largest bucket already
 
-    def _dispatch_chunk(self, fn_name: str, node: str, xs, t_sends,
-                        client: str, payload_bytes: int, depth: int):
-        from repro.core.cluster import InvokeResult
+    def _exec_chunk(self, fn_name: str, node: str, xs, t_sends, client: str,
+                    payload_bytes: int, floor: Optional[float], cycle: _Cycle,
+                    depth: int, parents) -> _Frame:
+        """Run the main batched dispatch of one chunk (store effects +
+        per-request timeline); downstream routing is the cycle driver's job."""
+        from repro.core.cluster import fires_sync_downstream
         from repro.core.keygroup import KeygroupSpec, arena_new
         from repro.core.versioning import MAX_NODES
 
@@ -175,15 +540,20 @@ class BatchedInvocationEngine:
         nd = c.nodes[node]
         bhandler = nd.batched_handlers[fn_name]
         n = len(xs)
+        self.stats.dispatches += 1
 
-        link = c.net.link(client, node)
-        hop_ms = c.net.one_way_ms(client, node) + link.transfer_ms(payload_bytes)
+        hop_ms = self._hop_ms(client, node, payload_bytes)
         t_arrives = [t + hop_ms for t in t_sends]
+        if floor is not None:
+            # the window closed at ``floor``: early arrivals waited for it
+            t_arrives = [max(t, floor) for t in t_arrives]
 
         kg, store_node, per_op_ms = c._resolve_placement(spec, node)
         if kg is not None:
-            # a coalesced batch executes once its last member has arrived
-            c._deliver_until(store_node, max(t_arrives))
+            # fold deliveries up to the cycle's shared high-water mark for
+            # this store node (never below this chunk's own last arrival)
+            hw = max(max(t_arrives), cycle.hwm.get(store_node, -math.inf))
+            c._deliver_until(store_node, hw)
             snd = c.nodes[store_node]
             store, clock = snd.stores[kg], snd.clock
         else:
@@ -219,48 +589,23 @@ class BatchedInvocationEngine:
 
         wrote = any(k in ("set", "delete") for k, _ in ops)
         if kg is not None and wrote:
-            # ONE coalesced snapshot at the last writer's apply time
-            c._schedule_replication(kg, store_node, max(t_applieds))
+            # defer to the cycle: ONE coalesced snapshot per (kg, node)
+            rkey = (kg, store_node)
+            if rkey in cycle.repl:
+                self.stats.replication_coalesced += 1
+            cycle.repl[rkey] = max(cycle.repl.get(rkey, -math.inf),
+                                   max(t_applieds))
 
         # one transfer for the whole batch, then host-side row views
         ys_host = jax.tree.map(np.asarray, jax.device_get(ys))
         outputs = [jax.tree.map(lambda a: a[i], ys_host) for i in range(n)]
-        chains = [[fn_name] for _ in range(n)]
-        t_downs = list(t_applieds)
-
-        # downstream fan-out, batched per callee (same gating as invoke's
-        # _route_downstream; async calls always fire)
-        if spec.calls or spec.async_calls:
-            from repro.core.cluster import fires_sync_downstream
-            fires = [fires_sync_downstream(y) for y in outputs]
-            for callee in spec.calls:
-                idxs = [i for i in range(n) if fires[i]]
-                if not idxs:
-                    continue
-                target = c._nearest_deployment(callee, node)
-                subs = self.dispatch(callee, target,
-                                     [outputs[i] for i in idxs],
-                                     [t_downs[i] for i in idxs], client=node,
-                                     payload_bytes=payload_bytes,
-                                     _depth=depth + 1)
-                for i, sub in zip(idxs, subs):
-                    chains[i].extend(sub.chain)
-                    t_downs[i] = sub.t_received
-            for callee in spec.async_calls:
-                target = c._nearest_deployment(callee, node)
-                subs = self.dispatch(callee, target, outputs, list(t_downs),
-                                     client=node, payload_bytes=payload_bytes,
-                                     _depth=depth + 1)
-                for i, sub in zip(range(n), subs):
-                    chains[i].extend(sub.chain)
-
-        results = []
-        for i in range(n):
-            t_done = max(t_applieds[i], t_downs[i])
-            t_received = t_done + hop_ms
-            results.append(InvokeResult(
-                output=outputs[i], response_ms=t_received - t_sends[i],
-                t_sent=t_sends[i], t_received=t_received,
-                t_applied=t_applieds[i], kv_ops=list(ops), node=node,
-                chain=chains[i]))
-        return results
+        fires = ([fires_sync_downstream(y) for y in outputs]
+                 if spec.calls else [True] * n)
+        todo = ([(cal, False) for cal in spec.calls]
+                + [(cal, True) for cal in spec.async_calls])
+        return _Frame(
+            fn=fn_name, node=node, client=client, payload_bytes=payload_bytes,
+            depth=depth, t_sends=list(t_sends), hop_ms=hop_ms,
+            outputs=outputs, t_applieds=t_applieds,
+            chains=[[fn_name] for _ in range(n)], t_downs=list(t_applieds),
+            ops=list(ops), todo=todo, fires=fires, parents=list(parents))

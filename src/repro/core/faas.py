@@ -208,7 +208,18 @@ def compile_handler(spec: FunctionSpec, node_id: int,
         return jitted(store, clock, x) + (list(op_log),)
 
     step.op_log = op_log
+    step.read_only = handler_read_only(op_log)
     return step
+
+
+def handler_read_only(op_log: Sequence[Tuple[str, int]]) -> bool:
+    """Whether a deploy-time op trace contains no mutating store ops.
+
+    The router uses this to decide which handlers are safe to re-invoke
+    (hedged retries): a mutating handler re-runs its writes and replication
+    events on every retry, so only read-only handlers may be hedged.  An
+    EMPTY trace (stateless handler) is trivially read-only."""
+    return all(k in ("get", "scan") for k, _ in op_log)
 
 
 def compile_batched_handler(spec: FunctionSpec, node_id: int,
@@ -250,7 +261,7 @@ def compile_batched_handler(spec: FunctionSpec, node_id: int,
 
     # trace once at deploy time: populates the static op log
     _ = jax.eval_shape(pure, *_example_state(spec, example_input, node_id))
-    read_only = bool(op_log) and all(k in ("get", "scan") for k, _ in op_log)
+    read_only = handler_read_only(op_log)
 
     def scanned(store, clock, xs, valid):
         def step(carry, inp):

@@ -4,10 +4,30 @@ The paper's clients "directly access their local, lightweight edge FaaS
 instances" (§6) — the router codifies that: pick the lowest-latency live
 deployment that satisfies the session's consistency requirement, with an
 optional hedged second request as straggler mitigation (runtime tier).
+
+Correctness notes (the two bugs PR 2 fixed):
+
+* hedging re-invokes the function, so it is only safe for READ-ONLY
+  handlers — re-running a mutating handler applies its writes and
+  replication events twice.  The router checks the deploy-time op trace
+  (``faas.compile_handler``'s ``read_only`` flag) and suppresses the hedge
+  for mutating handlers (counted in ``stats.hedges_suppressed``);
+* session tokens must observe the STORE node's version vector and clock,
+  not the serving node's: under ``PEER_FETCH``/``CLOUD_CENTRAL`` the write
+  lands at the owner/cloud store while ``res.node`` is the edge node the
+  client talked to.  Placement is resolved via
+  ``cluster._resolve_placement`` so reads-your-writes holds under every
+  placement.
+
+The router also fronts the batched invocation engine: ``submit`` enqueues a
+request (same nearest-replica/session pick as ``invoke``), and
+``pump``/``flush`` drain the engine's arrival-time windows, folding each
+completed result back into its session.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -22,6 +42,7 @@ class RouterStats:
     requests: int = 0
     hedges_fired: int = 0
     hedge_wins: int = 0
+    hedges_suppressed: int = 0      # mutating handler: hedge would double-write
     redirects_for_consistency: int = 0
 
 
@@ -33,6 +54,8 @@ class Router:
         self.hedge_after_ms = hedge_after_ms
         self.stats = RouterStats()
         self.sessions: Dict[str, Session] = {}
+        # engine tickets in flight through this router: ticket -> (fn, session)
+        self._inflight: Dict[int, Tuple[str, Optional[str]]] = {}
 
     # ------------------------------------------------------------------ picks
     def candidates(self, fn_name: str) -> List[str]:
@@ -61,15 +84,18 @@ class Router:
                 return cands[0]
         return cands[0]
 
+    def _session(self, session_id: Optional[str]) -> Optional[Session]:
+        if session_id is None:
+            return None
+        from repro.core.versioning import MAX_NODES
+        return self.sessions.setdefault(session_id,
+                                        Session(num_nodes=MAX_NODES))
+
     # ----------------------------------------------------------------- invoke
     def invoke(self, fn_name: str, x, t_send: float = 0.0,
                session_id: Optional[str] = None,
                payload_bytes: int = 64) -> InvokeResult:
-        session = None
-        if session_id is not None:
-            from repro.core.versioning import MAX_NODES
-            session = self.sessions.setdefault(
-                session_id, Session(num_nodes=MAX_NODES))
+        session = self._session(session_id)
         node = self.pick(fn_name, session)
         self.stats.requests += 1
         res = self.cluster.invoke(fn_name, node, x, t_send=t_send,
@@ -78,28 +104,104 @@ class Router:
 
         # hedged request: if the primary exceeded the hedge deadline, fire the
         # second-nearest replica and take the earlier completion (straggler
-        # mitigation; only sensible for read-dominated handlers).
+        # mitigation).  Re-invoking re-RUNS the handler, so only read-only
+        # handlers may hedge: a mutating handler would apply its writes (and
+        # schedule replication) twice.
         if (self.hedge_after_ms is not None
                 and res.response_ms > self.hedge_after_ms):
             cands = self.candidates(fn_name)
             if len(cands) > 1:
-                self.stats.hedges_fired += 1
-                alt = self.cluster.invoke(
-                    fn_name, cands[1], x,
-                    t_send=t_send + self.hedge_after_ms,
-                    client=self.client, payload_bytes=payload_bytes)
-                if alt.t_received < res.t_received:
-                    self.stats.hedge_wins += 1
-                    res = alt
+                if self.cluster.is_read_only(fn_name):
+                    self.stats.hedges_fired += 1
+                    alt = self.cluster.invoke(
+                        fn_name, cands[1], x,
+                        t_send=t_send + self.hedge_after_ms,
+                        client=self.client, payload_bytes=payload_bytes)
+                    if alt.t_received < res.t_received:
+                        self.stats.hedge_wins += 1
+                        res = alt
+                else:
+                    self.stats.hedges_suppressed += 1
 
         if session is not None:
-            spec = self.cluster.specs[fn_name]
-            kg = spec.keygroups[0] if spec.keygroups else None
-            if kg is not None and kg in self.cluster.nodes[res.node].stores:
-                vv = np.asarray(self.cluster.store_of(kg, res.node).vv)
-                session.observe_read(vv)
-                wrote = any(k in ("set", "delete") for k, _ in res.kv_ops)
-                if wrote:
-                    nd = self.cluster.nodes[res.node]
-                    session.observe_write(nd.node_id, int(nd.clock))
+            self._observe(session, fn_name, res)
         return res
+
+    def _observe(self, session: Session, fn_name: str,
+                 res: InvokeResult) -> None:
+        """Fold a completed invocation into the session token.
+
+        The version vector and clock are taken from the STORE node the kv
+        ops actually hit (placement-resolved), not from ``res.node``: under
+        PEER_FETCH/CLOUD_CENTRAL the serving edge node holds no replica and
+        the write landed at the owner/cloud store."""
+        spec = self.cluster.specs[fn_name]
+        kg, store_node, _ = self.cluster._resolve_placement(spec, res.node)
+        if kg is None:
+            return
+        snd = self.cluster.nodes[store_node]
+        if kg not in snd.stores:
+            return
+        session.observe_read(np.asarray(snd.stores[kg].vv))
+        wrote = any(k in ("set", "delete") for k, _ in res.kv_ops)
+        if wrote:
+            # the write's version stamp carries the SERVING node's id (the
+            # handler is compiled with it) but the clock that advanced is
+            # the STORE node's — the pair the store's vv actually recorded
+            session.observe_write(self.cluster.nodes[res.node].node_id,
+                                  int(snd.clock))
+
+    # ---------------------------------------------------------------- batched
+    def submit(self, fn_name: str, x, t_send: float = 0.0,
+               session_id: Optional[str] = None,
+               payload_bytes: int = 64) -> int:
+        """Enqueue one invocation on the cluster's batched engine, routed
+        through the same nearest-replica/session pick as ``invoke``.  The
+        returned ticket is redeemed by ``pump``/``flush``, which also fold
+        the result back into the session.  Hedging does not apply to the
+        batched path (a coalescing server owns the whole batch timeline)."""
+        session = self._session(session_id)
+        node = self.pick(fn_name, session)
+        self.stats.requests += 1
+        ticket = self.cluster.engine.submit(fn_name, node, x, t_send=t_send,
+                                            client=self.client,
+                                            payload_bytes=payload_bytes)
+        self._inflight[ticket] = (fn_name, session_id)
+        return ticket
+
+    def pump(self, until_t: float = math.inf) -> Dict[int, InvokeResult]:
+        """Advance the engine's background flusher to ``until_t`` and fold
+        every completed request of this router into its session.  Returns
+        only THIS router's tickets — results of tickets submitted by other
+        callers of the shared engine are handed back for their owner's next
+        pump/flush."""
+        return self._fold(self.cluster.engine.pump(until_t))
+
+    def flush(self) -> Dict[int, InvokeResult]:
+        """Drain the engine regardless of window deadlines (own tickets
+        only, like ``pump``)."""
+        return self._fold(self.cluster.engine.flush())
+
+    def _fold(self, results: Dict[int, InvokeResult]) -> Dict[int, InvokeResult]:
+        mine: Dict[int, InvokeResult] = {}
+        foreign: Dict[int, InvokeResult] = {}
+        for ticket, res in results.items():
+            if ticket not in self._inflight:
+                foreign[ticket] = res     # another submitter's: not ours
+                continue
+            fn_name, session_id = self._inflight.pop(ticket)
+            session = self.sessions.get(session_id) if session_id else None
+            if session is not None:
+                self._observe(session, fn_name, res)
+            mine[ticket] = res
+        if foreign:
+            self.cluster.engine.hold_results(foreign)
+        # prune in-flight tickets that can no longer complete: not in this
+        # drain and no longer queued — dropped by a failed cycle's
+        # at-most-once contract or discarded via engine.discard
+        if self._inflight:
+            queued = {p["ticket"] for p in self.cluster.engine.pending()}
+            for t in [t for t in self._inflight
+                      if t not in results and t not in queued]:
+                del self._inflight[t]
+        return mine

@@ -241,9 +241,12 @@ def test_flush_survives_bad_group():
         c.engine.flush()
     # nothing dispatched, queue intact
     assert store_contents(c.nodes["edge"].stores["bmixkg"]) == before
-    assert len(c.engine._queue) == 2
-    # drop the bad request and the good one must still be redeemable
-    c.engine._queue = [p for p in c.engine._queue if p.fn == "batched_mix"]
+    assert len(c.engine.pending()) == 2
+    # drop the bad request (public queue-surgery API) and the good one must
+    # still be redeemable
+    assert c.engine.discard(bad)
+    assert not c.engine.discard(bad)      # already gone
+    assert [p["ticket"] for p in c.engine.pending()] == [ok]
     results = c.engine.flush()
     assert ok in results and results[ok].chain == ["batched_mix"]
 
@@ -262,8 +265,10 @@ def test_flush_mid_dispatch_failure_keeps_dispatched_results():
                           t_send=1.0)
     with pytest.raises(Exception):
         c.engine.flush()
+    # the failing group was dropped at-most-once style (its effects may have
+    # committed); nothing left queued to poke
+    assert c.engine.pending() == []
     # the good group dispatched (store mutated); its ticket must redeem now
-    c.engine._queue = []          # drop the poisoned request
     results = c.engine.flush()
     assert ok in results and results[ok].chain == ["batched_mix"]
 
@@ -301,6 +306,22 @@ def test_mixed_fire_sync_downstream_matches_sequential():
         ["batched_gate", "batched_async_sink"], ["batched_gate"],
         ["batched_gate", "batched_async_sink"]]
     _assert_same_state(c, c2, kg="asinkkg")
+
+
+def test_all_filtered_sync_downstream_still_returns_results():
+    """A batch where NO request fires its sync callee must still finalize
+    (regression: the wave loop once dropped such frames' results)."""
+    c = Cluster({"edge": "edge", "cloud": "cloud"}, measure_compute=False)
+    c.deploy(get_function("batched_async_sink"), ["edge"])
+    c.deploy(get_function("batched_gate"), ["edge"])
+    xs = [np.full(4, -1.0, np.float32)] * 3        # all filtered
+    rs = c.invoke_batch("batched_gate", "edge", xs,
+                        t_sends=[0.0, 1.0, 2.0])
+    assert len(rs) == 3
+    assert all(r.chain == ["batched_gate"] for r in rs)
+    tk = c.engine.submit("batched_gate", "edge", xs[0])
+    out = c.engine.flush()
+    assert out[tk].chain == ["batched_gate"]
 
 
 def test_downstream_cycle_raises_cleanly():

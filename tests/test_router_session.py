@@ -1,0 +1,209 @@
+"""Router correctness: hedging must not double-apply writes (read-only
+gate from the deploy-time op trace), session tokens must observe the STORE
+node's clock under remote placements, and the batched submit/pump/flush
+path must fold results back into sessions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ReplicationPolicy
+from repro.core import Cluster, Router, enoki_function, get_function
+from repro.core.store import store_contents
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@enoki_function(name="rtr_counter", keygroups=["rtrcnt"], codec_width=4)
+def rtr_counter(kv, x):
+    cur, found = kv.get("c")
+    new = jnp.where(found, cur[0] + 1.0, 1.0)
+    kv.set("c", jnp.stack([new, 0.0, 0.0, 0.0]))
+    return jnp.stack([new])
+
+
+@enoki_function(name="rtr_peek", keygroups=["rtrcnt"], codec_width=4)
+def rtr_peek(kv, x):
+    cur, found = kv.get("c")
+    return cur[:1]
+
+
+def _cluster():
+    return Cluster({"edge": "edge", "edge2": "edge", "cloud": "cloud"},
+                   measure_compute=False)
+
+
+def _count(c, node):
+    contents = store_contents(c.nodes[node].stores["rtrcnt"])
+    return list(contents.values())[0][2][0] if contents else 0.0
+
+
+# ---------------------------------------------------------------------------
+# hedging vs mutating handlers
+# ---------------------------------------------------------------------------
+
+def test_hedge_on_mutating_counter_does_not_change_count():
+    """Regression for the hedged-duplicate-write bug: a hedged invoke of a
+    mutating function must leave the count identical to the unhedged run —
+    the hedge is suppressed, not fired."""
+    c_hedged = _cluster()
+    c_hedged.deploy(get_function("rtr_counter"), ["edge", "edge2"],
+                    policy=ReplicationPolicy.REPLICATED)
+    hedged = Router(c_hedged, hedge_after_ms=0.0)   # every request "slow"
+    r = hedged.invoke("rtr_counter", jnp.zeros((1,)))
+
+    c_plain = _cluster()
+    c_plain.deploy(get_function("rtr_counter"), ["edge", "edge2"],
+                   policy=ReplicationPolicy.REPLICATED)
+    plain = Router(c_plain)
+    r_plain = plain.invoke("rtr_counter", jnp.zeros((1,)))
+
+    assert float(np.asarray(r.output)[0]) == float(np.asarray(r_plain.output)[0]) == 1.0
+    assert hedged.stats.hedges_suppressed == 1
+    assert hedged.stats.hedges_fired == 0
+    c_hedged.flush_replication()
+    c_plain.flush_replication()
+    for node in ("edge", "edge2"):
+        assert _count(c_hedged, node) == _count(c_plain, node) == 1.0
+
+
+def test_hedge_still_fires_for_read_only_handlers():
+    c = _cluster()
+    c.deploy(get_function("rtr_counter"), ["edge", "edge2"],
+             policy=ReplicationPolicy.REPLICATED)
+    c.deploy(get_function("rtr_peek"), ["edge", "edge2"],
+             policy=ReplicationPolicy.REPLICATED)
+    assert c.is_read_only("rtr_peek")
+    assert not c.is_read_only("rtr_counter")
+    router = Router(c, hedge_after_ms=0.0)
+    router.invoke("rtr_counter", jnp.zeros((1,)))      # suppressed
+    router.invoke("rtr_peek", jnp.zeros((1,)))         # hedges
+    assert router.stats.hedges_fired == 1
+    assert router.stats.hedges_suppressed == 1
+    # the hedged read did not touch state anywhere
+    c.flush_replication()
+    assert _count(c, "edge") == _count(c, "edge2") == 1.0
+
+
+# ---------------------------------------------------------------------------
+# session clocks under remote placements
+# ---------------------------------------------------------------------------
+
+def test_session_reads_your_writes_under_cloud_central():
+    """Under CLOUD_CENTRAL the write lands at the CLOUD store while the
+    client talks to an edge node: the session must record the cloud node's
+    clock (pre-fix it recorded the edge node's — which never advanced — so
+    the token silently demanded nothing)."""
+    c = _cluster()
+    c.deploy(get_function("rtr_counter"), ["edge", "edge2"],
+             policy=ReplicationPolicy.CLOUD_CENTRAL, owner="cloud")
+    router = Router(c)
+    r = router.invoke("rtr_counter", jnp.zeros((1,)), session_id="s1")
+    assert r.node == "edge"                       # served by the edge
+    session = router.sessions["s1"]
+    cloud, edge = c.nodes["cloud"], c.nodes["edge"]
+    req = session.requirement()
+    # the clock that advanced is the CLOUD (store) node's — the serving
+    # edge's own clock never moves under a remote placement (the pre-fix
+    # bug recorded THAT clock, i.e. zero, so the token demanded nothing)
+    assert int(cloud.clock) > 0
+    assert int(edge.clock) == 0
+    # the write stamp pairs the serving node's id with the store's clock
+    assert req[edge.node_id] == int(cloud.clock)
+    assert req.sum() == req[edge.node_id]         # nothing bogus recorded
+    # reads-your-writes: the actual store can serve the session
+    assert session.can_read_from(np.asarray(c.store_of("rtrcnt", "cloud").vv))
+    # and a follow-up through the same session sees its own write
+    r2 = router.invoke("rtr_counter", jnp.zeros((1,)), session_id="s1",
+                       t_send=r.t_received)
+    assert float(np.asarray(r2.output)[0]) == 2.0
+
+
+def test_session_observes_store_node_under_peer_fetch():
+    c = _cluster()
+    # function runs at the edge; its keygroup lives at the (non-deployment)
+    # owner edge2, so every invocation is a remote placement
+    c.deploy(get_function("rtr_counter"), ["edge"],
+             policy=ReplicationPolicy.PEER_FETCH, owner="edge2")
+    router = Router(c)
+    r = router.invoke("rtr_counter", jnp.zeros((1,)), session_id="s")
+    assert r.node == "edge"                       # served locally...
+    owner = c.nodes["edge2"]                      # ...state at the owner
+    req = router.sessions["s"].requirement()
+    assert int(owner.clock) > 0
+    assert req[c.nodes["edge"].node_id] == int(owner.clock)
+    assert router.sessions["s"].can_read_from(
+        np.asarray(c.store_of("rtrcnt", "edge2").vv))
+
+
+# ---------------------------------------------------------------------------
+# batched router path
+# ---------------------------------------------------------------------------
+
+def test_router_submit_pump_folds_sessions():
+    c = _cluster()
+    c.deploy(get_function("rtr_counter"), ["edge", "edge2"],
+             policy=ReplicationPolicy.REPLICATED)
+    c.engine.configure(window_ms=5.0)
+    router = Router(c)
+    tks = [router.submit("rtr_counter", jnp.zeros((1,)), t_send=float(i),
+                         session_id="s1") for i in range(3)]
+    assert router.pump(0.0) == {}
+    out = router.pump(1000.0)
+    assert set(out) == set(tks)
+    assert sorted(float(np.asarray(out[t].output)[0]) for t in tks) \
+        == [1.0, 2.0, 3.0]
+    # session observed the batch's writes at the store node
+    session = router.sessions["s1"]
+    edge = c.nodes["edge"]
+    assert session.requirement()[edge.node_id] == int(edge.clock) > 0
+    assert session.can_read_from(np.asarray(c.store_of("rtrcnt", "edge").vv))
+    assert router._inflight == {}
+
+
+def test_two_routers_sharing_engine_keep_their_tickets():
+    """Two routers front the same cluster engine: one router's drain must
+    not swallow the other's results — foreign tickets are handed back for
+    their owner's next pump/flush, and each session still updates."""
+    c = _cluster()
+    c.deploy(get_function("rtr_counter"), ["edge"],
+             policy=ReplicationPolicy.REPLICATED)
+    r1, r2 = Router(c), Router(c)
+    ta = r1.submit("rtr_counter", jnp.zeros((1,)), session_id="a")
+    tb = r2.submit("rtr_counter", jnp.zeros((1,)), t_send=1.0,
+                   session_id="b")
+    out1 = r1.flush()                 # drains the engine, returns only ta
+    assert set(out1) == {ta}
+    out2 = r2.pump(0.0)               # picks up the held-back result
+    assert set(out2) == {tb}
+    assert r1.sessions["a"].requirement().sum() > 0
+    assert r2.sessions["b"].requirement().sum() > 0
+    assert r1._inflight == {} and r2._inflight == {}
+
+
+def test_inflight_pruned_after_discard():
+    """A ticket discarded from the engine queue can never complete; the
+    router must not track it forever."""
+    c = _cluster()
+    c.deploy(get_function("rtr_counter"), ["edge"],
+             policy=ReplicationPolicy.REPLICATED)
+    router = Router(c)
+    t = router.submit("rtr_counter", jnp.zeros((1,)), session_id="s")
+    assert c.engine.discard(t)
+    assert router.flush() == {}
+    assert router._inflight == {}
+
+
+def test_router_flush_drains_engine():
+    c = _cluster()
+    c.deploy(get_function("rtr_counter"), ["edge"],
+             policy=ReplicationPolicy.REPLICATED)
+    router = Router(c)
+    t1 = router.submit("rtr_counter", jnp.zeros((1,)), session_id="a")
+    t2 = router.submit("rtr_counter", jnp.zeros((1,)), t_send=1.0,
+                       session_id="b")
+    out = router.flush()
+    assert set(out) == {t1, t2}
+    # both sessions were folded independently
+    for sid in ("a", "b"):
+        assert router.sessions[sid].requirement().sum() > 0

@@ -41,6 +41,36 @@ def test_serializer_integrity_check():
         deserialize_tree(corrupted, _tree())
 
 
+def test_serializer_corrupt_magic_raises_ioerror():
+    """A blob whose leading (magic) bytes are corrupted must surface the
+    checkpoint-corruption IOError, not a raw ``zlib.error`` from the
+    fallback decompressor."""
+    from repro.checkpoint import serialize_tree
+    from repro.checkpoint.serializer import decompress_bytes
+    blob = bytearray(serialize_tree(_tree()))
+    blob[0] ^= 0xFF
+    blob[1] ^= 0xFF
+    with pytest.raises(IOError, match="corrupted|zstd"):
+        decompress_bytes(bytes(blob))
+
+
+def test_serializer_truncated_frame_raises_ioerror():
+    from repro.checkpoint import serialize_tree
+    from repro.checkpoint.serializer import decompress_bytes
+    blob = serialize_tree(_tree())
+    with pytest.raises(IOError, match="corrupted|zstd"):
+        decompress_bytes(blob[: len(blob) // 2])
+
+
+def test_serializer_zstd_magic_without_zstd_raises_ioerror():
+    """A frame carrying the zstd magic must fail as an IOError either way:
+    'zstandard not installed' when the module is absent, frame-corruption
+    when it is present (the payload here is junk)."""
+    from repro.checkpoint.serializer import _ZSTD_MAGIC, decompress_bytes
+    with pytest.raises(IOError):
+        decompress_bytes(_ZSTD_MAGIC + b"\x00\x01junk")
+
+
 def test_manager_save_restore_retention(tmp_path):
     from repro.checkpoint import CheckpointManager
     mgr = CheckpointManager(str(tmp_path), keep=2)

@@ -1,0 +1,350 @@
+"""Background flusher + flush-cycle semantics: arrival-time windows (a
+request never waits past window_ms; full buckets flush early), pump
+draining only due windows, cross-node flush parity vs per-node sequential
+flushes, cross-caller downstream coalescing, and the replication
+delivery-order regression (heap fix in Cluster._deliver_until)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ReplicationPolicy
+from repro.core import Cluster, enoki_function, get_function
+from repro.core.store import store_contents
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@enoki_function(name="wf_mix", keygroups=["wfkg"], codec_width=8)
+def wf_mix(kv, x):
+    cur, found = kv.get("acc")
+    kv.set("acc", cur + x)
+    return cur[:2] + x[:2]
+
+
+@enoki_function(name="wf_set", keygroups=["wfsetkg"], codec_width=4)
+def wf_set(kv, x):
+    kv.set("v", x)
+    return x[:1]
+
+
+def _cluster(nodes=("edge", "edge2", "cloud")):
+    kinds = {"edge": "edge", "edge2": "edge", "cloud": "cloud"}
+    return Cluster({n: kinds[n] for n in nodes}, measure_compute=False)
+
+
+def _x(v=1.0):
+    return np.full(8, v, np.float32)
+
+
+# ---------------------------------------------------------------------------
+# window semantics
+# ---------------------------------------------------------------------------
+
+def test_request_never_waits_past_window_ms():
+    """A windowed request executes at its window's close: its latency is the
+    solo latency plus AT MOST window_ms (exactly window_ms for the request
+    that opened the window, less for later joiners)."""
+    solo = _cluster()
+    solo.deploy(get_function("wf_mix"), ["edge"])
+    r0 = solo.invoke("wf_mix", "edge", _x(), t_send=0.0)
+
+    c = _cluster()
+    c.deploy(get_function("wf_mix"), ["edge"])
+    c.engine.configure(window_ms=5.0)
+    t1 = c.engine.submit("wf_mix", "edge", _x(), t_send=0.0)
+    t2 = c.engine.submit("wf_mix", "edge", _x(), t_send=2.0)  # joins window
+    assert c.engine.pump(0.0) == {}          # window not due yet
+    out = c.engine.pump(1000.0)
+    assert set(out) == {t1, t2}
+    # opener waits the full window...
+    assert out[t1].response_ms == pytest.approx(r0.response_ms + 5.0)
+    # ...joiners strictly less — nobody waits past window_ms
+    assert out[t2].response_ms < r0.response_ms + 5.0
+    assert out[t2].response_ms > r0.response_ms
+    # both executed at the window close (same apply instant)
+    assert out[t1].t_applied == pytest.approx(out[t2].t_applied)
+
+
+def test_full_bucket_flushes_early():
+    """A window that fills to max_batch dispatches immediately — identical
+    timing to an explicit batch, no deadline wait — and a later request
+    opens a fresh window."""
+    c = _cluster()
+    c.deploy(get_function("wf_mix"), ["edge"])
+    c.engine.configure(window_ms=1000.0, max_batch=4)
+    ts = [float(i) for i in range(4)]
+    tks = [c.engine.submit("wf_mix", "edge", _x(i), t_send=t)
+           for i, t in enumerate(ts)]
+    assert c.engine.stats.auto_flushes == 1
+    assert c.engine.pending() == []          # flushed, nothing queued
+    t5 = c.engine.submit("wf_mix", "edge", _x(9.0), t_send=4.0)
+    assert [p["ticket"] for p in c.engine.pending()] == [t5]
+
+    out = c.engine.pump(0.0)                 # nothing due; ready results only
+    assert set(out) == set(tks)
+    ref = _cluster()
+    ref.deploy(get_function("wf_mix"), ["edge"])
+    bat = ref.invoke_batch("wf_mix", "edge", [_x(i) for i in range(4)],
+                           t_sends=ts)
+    for tk, b in zip(tks, bat):
+        assert out[tk].t_received == b.t_received
+        assert out[tk].response_ms == b.response_ms
+        np.testing.assert_array_equal(np.asarray(out[tk].output),
+                                      np.asarray(b.output))
+
+
+def test_auto_flush_validation_leaves_window_intact():
+    """Flush-on-full validates BEFORE taking the window off the queue: a
+    KeyError for an undeployed function must lose no tickets."""
+    c = _cluster()
+    c.deploy(get_function("wf_mix"), ["edge"])
+    c.engine.configure(window_ms=100.0, max_batch=2)
+    t1 = c.engine.submit("not_deployed", "edge", _x())
+    with pytest.raises(KeyError, match="not_deployed"):
+        c.engine.submit("not_deployed", "edge", _x())   # fills the window
+    assert len(c.engine.pending()) == 2                 # nothing lost
+    assert c.engine.discard(t1)
+
+
+def test_out_of_order_arrival_opens_its_own_window():
+    """A request arriving BEFORE a window's opener must not inherit the
+    later deadline (it would wait past window_ms) — it opens its own,
+    earlier-closing window."""
+    solo = _cluster()
+    solo.deploy(get_function("wf_mix"), ["edge"])
+    r0 = solo.invoke("wf_mix", "edge", _x(), t_send=0.0)
+    c = _cluster()
+    c.deploy(get_function("wf_mix"), ["edge"])
+    c.engine.configure(window_ms=5.0)
+    late = c.engine.submit("wf_mix", "edge", _x(), t_send=10.0)
+    early = c.engine.submit("wf_mix", "edge", _x(), t_send=0.0)
+    assert len(c.engine.pending()) == 2                 # two windows
+    out = c.engine.pump(1000.0)
+    assert out[early].response_ms == pytest.approx(r0.response_ms + 5.0)
+    assert out[late].response_ms == pytest.approx(r0.response_ms + 5.0)
+
+
+def test_stateless_handlers_are_read_only_for_hedging():
+    """An empty op trace (no kv ops at all) is trivially safe to re-invoke."""
+    from repro.core import handler_read_only
+    assert handler_read_only([])
+    assert handler_read_only([("get", 4), ("scan", 8)])
+    assert not handler_read_only([("get", 4), ("set", 8)])
+
+
+def test_pump_drains_only_due_windows():
+    c = _cluster()
+    c.deploy(get_function("wf_mix"), ["edge"])
+    c.engine.configure(window_ms=5.0)
+    early = c.engine.submit("wf_mix", "edge", _x(), t_send=0.0)
+    late = c.engine.submit("wf_mix", "edge", _x(), t_send=100.0)  # new window
+    assert len(c.engine.pending()) == 2
+    out = c.engine.pump(50.0)
+    assert set(out) == {early}
+    assert [p["ticket"] for p in c.engine.pending()] == [late]
+    out2 = c.engine.pump(math.inf)
+    assert set(out2) == {late}
+    assert c.engine.pending() == []
+    assert c.engine.stats.deadline_flushes == 2
+
+
+def test_flush_ignores_deadlines_and_charges_no_wait():
+    """Explicit flush drains everything NOW with the pre-window timing model
+    (requests execute at their own arrivals)."""
+    solo = _cluster()
+    solo.deploy(get_function("wf_mix"), ["edge"])
+    r0 = solo.invoke("wf_mix", "edge", _x(), t_send=0.0)
+    c = _cluster()
+    c.deploy(get_function("wf_mix"), ["edge"])
+    c.engine.configure(window_ms=50.0)
+    t1 = c.engine.submit("wf_mix", "edge", _x(), t_send=0.0)
+    out = c.engine.flush()
+    assert out[t1].response_ms == pytest.approx(r0.response_ms)
+
+
+# ---------------------------------------------------------------------------
+# cross-node flush cycles
+# ---------------------------------------------------------------------------
+
+def test_cross_node_flush_parity_vs_sequential_per_node():
+    """One flush cycle spanning two nodes must produce the same per-request
+    outputs/timings and the same converged stores as dispatching each
+    node's batch separately.  Send times are chosen so neither path can
+    deliver a same-run replication snapshot mid-run (each node's batch
+    applies >10 ms — the edge-edge one-way delay — after the other node's
+    last arrival), which is exactly the regime where the cycle's
+    parallel-timeline model and sequential dispatch must agree."""
+    xs = [_x(float(i)) for i in range(8)]
+    # edge requests send at 5.0..5.3 (arrive ~5.5), edge2 at 0.0..0.3
+    # (arrive ~10.8): edge's snapshot reaches edge2 at ~15.5, edge2's
+    # reaches edge at ~20.8 — both after every arrival of the run
+    ts = [5.0 + i * 0.05 if i % 2 == 0 else i * 0.05 for i in range(8)]
+    nodes = ["edge" if i % 2 == 0 else "edge2" for i in range(8)]
+
+    c1 = _cluster()
+    c1.deploy(get_function("wf_mix"), ["edge", "edge2"],
+              policy=ReplicationPolicy.REPLICATED)
+    tks = [c1.engine.submit("wf_mix", nd, x, t_send=t)
+           for nd, x, t in zip(nodes, xs, ts)]
+    out = c1.engine.flush()
+    assert c1.engine.stats.cycles == 1
+
+    c2 = _cluster()
+    c2.deploy(get_function("wf_mix"), ["edge", "edge2"],
+              policy=ReplicationPolicy.REPLICATED)
+    ref = {}
+    for nd in ("edge", "edge2"):
+        idxs = [i for i in range(8) if nodes[i] == nd]
+        rs = c2.invoke_batch("wf_mix", nd, [xs[i] for i in idxs],
+                             t_sends=[ts[i] for i in idxs])
+        for i, r in zip(idxs, rs):
+            ref[i] = r
+
+    for i, tk in enumerate(tks):
+        a, b = out[tk], ref[i]
+        np.testing.assert_array_equal(np.asarray(a.output),
+                                      np.asarray(b.output))
+        assert a.t_applied == b.t_applied
+        assert a.t_received == b.t_received
+        assert a.node == b.node
+    c1.flush_replication()
+    c2.flush_replication()
+    for nd in ("edge", "edge2"):
+        assert (store_contents(c1.nodes[nd].stores["wfkg"])
+                == store_contents(c2.nodes[nd].stores["wfkg"]))
+        np.testing.assert_array_equal(np.asarray(c1.nodes[nd].clock),
+                                      np.asarray(c2.nodes[nd].clock))
+
+
+@enoki_function(name="wf_src_a", keygroups=[], calls=["wf_sink"],
+                codec_width=4)
+def wf_src_a(kv, x):
+    return x[:2]
+
+
+@enoki_function(name="wf_src_b", keygroups=[], calls=["wf_sink"],
+                codec_width=4)
+def wf_src_b(kv, x):
+    return x[:2]
+
+
+@enoki_function(name="wf_sink", keygroups=["wfsinkkg"], codec_width=4)
+def wf_sink(kv, x):
+    cur, _ = kv.get("n")
+    kv.set("n", cur + 1.0)
+    return x[:1]
+
+
+def test_cross_caller_downstream_coalescing():
+    """Downstream calls from DIFFERENT caller groups of one flush cycle to
+    the same callee merge into one batch: 3 wf_src_a + 2 wf_src_b requests
+    reach wf_sink as a single 5-deep dispatch."""
+    c = _cluster(("edge", "cloud"))
+    c.deploy(get_function("wf_sink"), ["edge"])
+    c.deploy(get_function("wf_src_a"), ["edge"])
+    c.deploy(get_function("wf_src_b"), ["edge"])
+    x = np.ones(4, np.float32)
+    tks = []
+    for i in range(3):
+        tks.append(c.engine.submit("wf_src_a", "edge", x, t_send=float(i)))
+    for i in range(2):
+        tks.append(c.engine.submit("wf_src_b", "edge", x, t_send=3.0 + i))
+    out = c.engine.flush()
+    # 2 caller dispatches + ONE merged sink dispatch (not one per caller)
+    assert c.engine.stats.dispatches == 3
+    assert c.engine.stats.downstream_coalesced == 5
+    assert all(out[t].chain[-1] == "wf_sink" for t in tks)
+    contents = store_contents(c.nodes["edge"].stores["wfsinkkg"])
+    assert list(contents.values())[0][2][0] == 5.0   # sink ran exactly 5x
+
+    # per-request latency matches the sequential router path
+    ref = _cluster(("edge", "cloud"))
+    ref.deploy(get_function("wf_sink"), ["edge"])
+    ref.deploy(get_function("wf_src_a"), ["edge"])
+    r0 = ref.invoke("wf_src_a", "edge", x, t_send=0.0)
+    assert out[tks[0]].response_ms == pytest.approx(r0.response_ms)
+
+
+def test_cycle_coalesces_replication_snapshots():
+    """Writes of one cycle to the same keygroup+node schedule ONE snapshot
+    (per-group snapshots are coalesced), and peers still converge."""
+    c = _cluster()
+    c.deploy(get_function("wf_mix"), ["edge", "edge2"],
+             policy=ReplicationPolicy.REPLICATED)
+    # two DIFFERENT caller groups (distinct clients) writing the same
+    # keygroup at the same store node in one cycle
+    for i in range(2):
+        c.engine.submit("wf_mix", "edge", _x(float(i)), t_send=float(i))
+    for i in range(2):
+        c.engine.submit("wf_mix", "edge", _x(10.0 + i), t_send=2.0 + i,
+                        client="client2")
+    c.engine.flush()
+    # ONE replication event for the whole cycle, not one per group
+    assert len(c._events) == 1
+    assert c.engine.stats.replication_coalesced == 1
+    c.flush_replication()
+    assert (store_contents(c.nodes["edge"].stores["wfkg"])
+            == store_contents(c.nodes["edge2"].stores["wfkg"]))
+
+
+# ---------------------------------------------------------------------------
+# replication delivery order (Cluster._deliver_until regression)
+# ---------------------------------------------------------------------------
+
+def _heap_ok(events):
+    return all(events[i] <= events[j]
+               for i in range(len(events))
+               for j in (2 * i + 1, 2 * i + 2) if j < len(events))
+
+
+def test_deliver_until_applies_in_arrival_order(monkeypatch):
+    """Three staggered snapshots scrambled in the pending list must merge in
+    (arrival, seq) order, and the keep-list must stay a valid heap."""
+    import repro.core.cluster as cluster_mod
+    c = _cluster()
+    c.deploy(get_function("wf_set"), ["edge", "edge2"],
+             policy=ReplicationPolicy.REPLICATED)
+    for i, t in enumerate((0.0, 100.0, 200.0)):
+        c.invoke("wf_set", "edge", np.full(4, float(i + 1), np.float32),
+                 t_send=t)
+    assert len(c._events) == 3
+    e1, e2, e3 = sorted(c._events)
+    c._events = [e3, e1, e2]                 # scrambled raw order
+
+    merged_arrivals = []
+    real_merge = cluster_mod.merge_stores
+
+    def spying_merge(a, b):
+        merged_arrivals.append(next(ev[0] for ev in (e1, e2, e3)
+                                    if ev[4] is b))
+        return real_merge(a, b)
+
+    monkeypatch.setattr(cluster_mod, "merge_stores", spying_merge)
+    c._deliver_until("edge2", float("inf"))
+    assert merged_arrivals == [e1[0], e2[0], e3[0]]   # network order
+    assert c._events == []
+    val = store_contents(c.nodes["edge2"].stores["wfsetkg"]).popitem()[1][2]
+    assert val[0] == 3.0                      # latest write wins
+
+
+def test_deliver_until_reheapifies_keep_list():
+    """Partial delivery (one target of several) must leave _events a valid
+    heap so later heappushes keep working."""
+    import heapq
+    c = _cluster()
+    c.deploy(get_function("wf_set"), ["edge", "edge2", "cloud"],
+             policy=ReplicationPolicy.REPLICATED)
+    for i, t in enumerate((0.0, 50.0, 100.0, 150.0)):
+        c.invoke("wf_set", "edge", np.full(4, float(i), np.float32),
+                 t_send=t)
+    assert len(c._events) == 8               # 4 writes x 2 peers
+    c._events = list(reversed(sorted(c._events)))    # worst-case scramble
+    c._deliver_until("edge2", float("inf"))
+    assert len(c._events) == 4               # cloud's deliveries kept
+    assert _heap_ok(c._events)
+    # and the heap keeps absorbing new events correctly
+    c.invoke("wf_set", "edge", np.full(4, 9.0, np.float32), t_send=200.0)
+    assert _heap_ok(c._events)
