@@ -32,6 +32,16 @@ read function and a write function with item sizes 1 B … 1 MB.  Two views:
    one flush cycle (cross-node fan-out, parallel timelines).  The check the
    acceptance pins: a 2-node windowed run at a 64-deep window sustains at
    least the single-node batch-64 ops/s of the explicit batch sweep.
+
+4. **Hedge sweep** (PR 3): open-loop read arrivals against a STRAGGLER
+   topology (the nearest replica serves slowly), windowed hedging off vs
+   on, driven pump-by-deadline through the router's batched path.  The
+   acceptance check: hedged p99 <= unhedged p99, plus hedge counters.
+
+5. **Serving sweep** (PR 3): the REAL wall-clock serving loop
+   (``launch/faas_server.py``), open-loop (fixed wall arrival rate) and
+   closed-loop (client threads re-submitting on completion) — virtual
+   latency percentiles and wall ops/s.
 """
 from __future__ import annotations
 
@@ -274,10 +284,129 @@ def run_window_sweep(window_sizes=tuple(WINDOW_SIZES_MS),
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Hedge sweep: windowed hedging on the straggler topology (batched path)
+# ---------------------------------------------------------------------------
+
+HEDGE_REQUESTS = 128
+HEDGE_WINDOW_MS = 16.0
+HEDGE_AFTER_MS = 4.0
+HEDGE_STRAGGLER_MS = 60.0       # compute charge at the overloaded nearest
+                                # replica (edge); edge2 stays fast
+HEDGE_RATE_PER_MS = 0.25        # open-loop arrivals: one every 4 virtual ms
+
+
+def _seed_and_warm(cluster: Cluster, nodes):
+    """Seed the read item and warm every jit bucket outside timed regions."""
+    from repro.core.engine import DEFAULT_BUCKETS
+    x = np.ones((BATCH_ITEM_WIDTH,), np.float32)
+    for nd in nodes:
+        cluster.invoke("fig4_write", nd, x)
+        for b in DEFAULT_BUCKETS:
+            cluster.invoke_batch("fig4_read", nd, [x] * b)
+    cluster.flush_replication()
+    return x
+
+
+def run_hedge_sweep(n_requests: int = HEDGE_REQUESTS,
+                    window_ms: float = HEDGE_WINDOW_MS,
+                    hedge_after_ms: float = HEDGE_AFTER_MS,
+                    straggler_ms: float = HEDGE_STRAGGLER_MS,
+                    rate_per_ms: float = HEDGE_RATE_PER_MS):
+    """Open-loop read arrivals against a STRAGGLER topology: the nearest
+    replica (edge) is overloaded (``straggler_ms`` of compute per request)
+    while the second-nearest (edge2) is fast.  Two identical runs through
+    the router's batched path — windowed hedging off vs on — driven pump-
+    by-deadline exactly like the wall-clock serving loop.  The acceptance
+    check: hedged p99 <= unhedged p99."""
+    import math as _math
+    from repro.core import Router, percentiles
+    rows = []
+    for hedged in (False, True):
+        cluster = Cluster({"edge": "edge", "edge2": "edge", "cloud": "cloud"},
+                          net=paper_topology(), measure_compute=False)
+        cluster.deploy(get_function("fig4_read"), ["edge", "edge2"])
+        cluster.deploy(get_function("fig4_write"), ["edge", "edge2"])
+        x = _seed_and_warm(cluster, ["edge", "edge2"])
+        cluster.set_compute_ms("edge", "fig4_read", straggler_ms)
+        cluster.engine.configure(window_ms=window_ms)
+        router = Router(cluster,
+                        hedge_after_ms=hedge_after_ms if hedged else None)
+        for i in range(n_requests):
+            router.submit("fig4_read", x, t_send=i / rate_per_ms)
+        out = {}
+        while len(out) < n_requests:
+            nd = router.next_deadline()
+            if nd is None:
+                out.update(router.pump(_math.inf))
+                break
+            out.update(router.pump(nd))
+        # hedge winners come re-stamped against the primary's send instant,
+        # so response_ms is the client-observed latency for every ticket
+        pct = percentiles([r.response_ms for r in out.values()])
+        rows.append({"hedged": hedged, "window_ms": window_ms,
+                     "hedge_after_ms": hedge_after_ms if hedged else None,
+                     "straggler_ms": straggler_ms,
+                     "p50_ms": round(pct[50], 2), "p90_ms": round(pct[90], 2),
+                     "p99_ms": round(pct[99], 2),
+                     "hedges_fired": router.stats.hedges_fired,
+                     "hedge_wins": router.stats.hedge_wins})
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Serving sweep: the wall-clock server, open- and closed-loop arrivals
+# ---------------------------------------------------------------------------
+
+SERVE_REQUESTS = 128
+SERVE_TIME_SCALE = 50.0         # 50 virtual ms per wall ms (compresses the
+                                # emulated network for benchmark runtime)
+
+
+def run_serving_sweep(n_requests: int = SERVE_REQUESTS,
+                      window_ms: float = 8.0,
+                      time_scale: float = SERVE_TIME_SCALE):
+    """Drive the REAL wall-clock serving loop (launch/faas_server.py):
+    open-loop (fixed wall arrival rate) and closed-loop (4 client threads,
+    next request on completion) — virtual-latency percentiles + wall ops/s."""
+    from repro.core import percentiles
+    from repro.launch.faas_server import (FaasServer, serve_closed_loop,
+                                          serve_open_loop)
+    rows = []
+    for mode in ("open", "closed"):
+        cluster = Cluster({"edge": "edge", "edge2": "edge", "cloud": "cloud"},
+                          net=paper_topology(), measure_compute=False)
+        cluster.deploy(get_function("fig4_read"), ["edge", "edge2"])
+        cluster.deploy(get_function("fig4_write"), ["edge", "edge2"])
+        x = _seed_and_warm(cluster, ["edge", "edge2"])
+        t0 = time.perf_counter()
+        with FaasServer(cluster, window_ms=window_ms,
+                        time_scale=time_scale) as srv:
+            if mode == "open":
+                serve_open_loop(srv, "fig4_read", lambda i: x,
+                                n_requests=n_requests, rate_per_ms=1.0)
+            else:
+                serve_closed_loop(srv, "fig4_read", lambda i: x,
+                                  n_requests=n_requests, concurrency=4)
+            elapsed = time.perf_counter() - t0
+            pct = percentiles(srv.response_ms)
+            rows.append({"mode": mode, "window_ms": window_ms,
+                         "requests": srv.stats.served,
+                         "wall_ops_per_s": round(n_requests / elapsed, 1),
+                         "p50_ms": round(pct[50], 2),
+                         "p90_ms": round(pct[90], 2),
+                         "p99_ms": round(pct[99], 2),
+                         "pumps": srv.stats.pumps,
+                         "wakeups": srv.stats.wakeups})
+    return rows
+
+
 def run():
     return {"size_sweep": run_size_sweep(),
             "batch_sweep": run_batch_sweep(),
-            "window_sweep": run_window_sweep()}
+            "window_sweep": run_window_sweep(),
+            "hedge_sweep": run_hedge_sweep(),
+            "serving_sweep": run_serving_sweep()}
 
 
 def main(json_out: str = None):
@@ -301,6 +430,16 @@ def main(json_out: str = None):
             print(f"{op}: batch-64 speedup vs batch-1 = {speedup:.1f}x")
     print_table(results["window_sweep"],
                 "Fig 4c — background flusher ops/s, window_ms × nodes")
+    print_table(results["hedge_sweep"],
+                "Fig 4d — windowed hedging on the straggler topology")
+    hs = {r["hedged"]: r for r in results["hedge_sweep"]}
+    if True in hs and False in hs:
+        print(f"read p99 straggler topology: unhedged {hs[False]['p99_ms']} ms"
+              f" -> hedged {hs[True]['p99_ms']} ms "
+              f"({hs[True]['hedge_wins']}/{hs[True]['hedges_fired']} "
+              f"hedges won)")
+    print_table(results["serving_sweep"],
+                "Fig 4e — wall-clock serving loop (open/closed arrivals)")
     for op in ("read", "write"):
         by_batch = {r["batch"]: r for r in results["batch_sweep"]
                     if r["op"] == op}

@@ -345,8 +345,30 @@ class Cluster:
         return out
 
     def is_read_only(self, fn_name: str) -> bool:
-        """Whether ``fn_name``'s deploy-time op trace is free of mutating
-        store ops (the flag ``faas.compile_handler`` derives; identical at
+        """Whether invoking ``fn_name`` is free of state mutation ANYWHERE
+        in its call graph: its own deploy-time op trace plus every
+        transitive callee's.  This is the hedge-safety gate — a hedged
+        retry re-runs the WHOLE downstream chain, so a stateless caller
+        with a mutating callee (e.g. a fig-8 filter in front of a writer)
+        is NOT safe to re-invoke even though its own trace is empty."""
+        seen = set()
+        stack = [fn_name]
+        while stack:
+            fn = stack.pop()
+            if fn in seen:
+                continue
+            seen.add(fn)
+            if not self._handler_read_only(fn):     # raises if fn_name
+                return False                        # itself is undeployed
+            spec = self.specs[fn]
+            for callee in (*spec.calls, *spec.async_calls):
+                if callee not in self.specs:
+                    return False    # unknown callee: cannot prove safety
+                stack.append(callee)
+        return True
+
+    def _handler_read_only(self, fn_name: str) -> bool:
+        """The per-handler flag from the deploy-time op trace (identical at
         every deployment since the trace is static)."""
         for n in self.naming.deployments_of(fn_name):
             h = self.nodes[n].handlers.get(fn_name)
@@ -359,6 +381,15 @@ class Cluster:
         if not nodes:
             raise KeyError(f"{fn_name} not deployed anywhere")
         return min(nodes, key=lambda n: self.net.rtt_ms(from_node, n))
+
+    def set_compute_ms(self, node: str, fn_name: str, ms: float) -> None:
+        """Override the per-invocation compute charge of ``fn_name`` at
+        ``node`` in the virtual timeline — the knob benchmarks/tests use to
+        model an overloaded STRAGGLER replica (the hedging scenario): the
+        nearest deployment stays nearest by RTT but serves slowly."""
+        if fn_name not in self.nodes[node].compute_ms:
+            raise KeyError(f"{fn_name!r} is not deployed at {node!r}")
+        self.nodes[node].compute_ms[fn_name] = float(ms)
 
     # -------------------------------------------------------------- debugging
     def store_of(self, kg: str, node: str) -> Store:

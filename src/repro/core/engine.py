@@ -30,7 +30,10 @@ Three APIs:
   drains every window whose deadline has passed.  A request therefore never
   waits past ``window_ms``, and requests flushed at the deadline are charged
   the wait (their ``t_applied`` anchors at the window close, the batched
-  analogue of a real coalescing server's arrival-time batching).
+  analogue of a real coalescing server's arrival-time batching).  A wall-
+  clock driver plugs a virtual-time source with ``use_clock`` (``pump()``
+  then advances to the clock's current instant) and sleeps until
+  ``next_deadline()`` instead of polling — see ``launch/faas_server.py``.
 
 A flush cycle dispatches its per-``(fn, node)`` groups as INDEPENDENT
 PARALLEL TIMELINES (§4.3's multi-node picture):
@@ -69,7 +72,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -155,11 +158,13 @@ class EngineStats:
 class BatchedInvocationEngine:
     def __init__(self, cluster, bucket_sizes: Sequence[int] = DEFAULT_BUCKETS,
                  window_ms: Optional[float] = None,
-                 max_batch: Optional[int] = None):
+                 max_batch: Optional[int] = None,
+                 clock: Optional[Callable[[], float]] = None):
         self.cluster = cluster
         self.buckets = tuple(sorted(set(int(b) for b in bucket_sizes)))
         self.window_ms = window_ms
         self.max_batch = max_batch
+        self.clock = clock
         self.stats = EngineStats()
         self._windows: List[_Window] = []
         self._tickets = 0
@@ -193,6 +198,33 @@ class BatchedInvocationEngine:
         self.window_ms = window_ms
         self.max_batch = max_batch
         return self
+
+    # ------------------------------------------------------------------ clock
+    def use_clock(self, clock: Optional[Callable[[], float]]
+                  ) -> "BatchedInvocationEngine":
+        """Plug a virtual-time source (a zero-arg callable returning ms).
+        With a clock set, ``pump()`` with no argument advances to the
+        clock's *current* time instead of infinity — the hook a wall-clock
+        serving loop uses to map real time onto the virtual timeline."""
+        self.clock = clock
+        return self
+
+    def now(self) -> float:
+        """Current virtual time per the plugged clock.  Without one it is
+        ``+inf`` — the single convention ``pump()`` (and ``Router.pump``)
+        resolve an omitted ``until_t`` through: an unclocked pump drains
+        everything, the pre-clock behaviour."""
+        return self.clock() if self.clock is not None else math.inf
+
+    def next_deadline(self) -> Optional[float]:
+        """Earliest finite window deadline still queued, or ``None`` when no
+        timed window is open.  A serving driver sleeps exactly until this
+        instant instead of polling ``pump``; a new ``submit`` can only move
+        the horizon EARLIER (windows never extend), so the driver re-queries
+        after every enqueue."""
+        deadlines = [w.deadline for w in self._windows
+                     if math.isfinite(w.deadline)]
+        return min(deadlines) if deadlines else None
 
     # ------------------------------------------------------------- coalescing
     def submit(self, fn: str, node: str, x, t_send: float = 0.0,
@@ -302,12 +334,18 @@ class BatchedInvocationEngine:
         self._ready = {}
         return out
 
-    def pump(self, until_t: float = math.inf) -> Dict[int, Any]:
+    def pump(self, until_t: Optional[float] = None) -> Dict[int, Any]:
         """Advance the background flusher to virtual time ``until_t``: every
         window whose deadline has passed dispatches, all due windows in ONE
         flush cycle.  Requests flushed here are charged the wait until their
         window's close.  Returns ``{ticket: InvokeResult}`` for everything
-        that completed (including earlier flush-on-full results)."""
+        that completed (including earlier flush-on-full results).
+
+        With ``until_t`` omitted, a plugged clock (``use_clock``) supplies
+        the current virtual time; without one, everything drains
+        (``until_t = inf``, the pre-clock behaviour)."""
+        if until_t is None:
+            until_t = self.now()
         due = [w for w in self._windows if w.deadline <= until_t]
         self._validate(due)
         cycle_out = {}

@@ -23,12 +23,21 @@ The router also fronts the batched invocation engine: ``submit`` enqueues a
 request (same nearest-replica/session pick as ``invoke``), and
 ``pump``/``flush`` drain the engine's arrival-time windows, folding each
 completed result back into its session.
+
+Straggler mitigation extends to the batched path as a WINDOWED HEDGE
+(``hedge_after_ms``): when a read-only request's arrival-time window
+outlives its hedge deadline (``t_send + hedge_after_ms``), ``pump`` fires a
+duplicate ticket at the nearest OTHER replica at the hedge instant.  The
+pair resolves to the earlier completion — reported under the primary
+ticket — and the loser is discarded from the queue if it never dispatched
+(at-most-once: a hedge only ever duplicates read-only work).  Hedge fire
+times are part of ``next_deadline()`` so a serving loop wakes for them.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -46,6 +55,30 @@ class RouterStats:
     redirects_for_consistency: int = 0
 
 
+@dataclasses.dataclass
+class _InFlight:
+    """Everything the router needs to re-route a queued ticket (hedging)
+    and to fold its eventual result into the right session."""
+    fn: str
+    session_id: Optional[str]
+    x: object
+    t_send: float
+    node: str
+    payload_bytes: int
+    hedge_decided: bool = False     # the fire/suppress choice is made ONCE
+
+
+@dataclasses.dataclass(eq=False)
+class _Hedge:
+    """A hedged pair: the primary ticket and its duplicate.  Registered in
+    ``Router._hedges`` under BOTH tickets; resolves to the earlier
+    completion, reported under the primary."""
+    primary: int
+    hedge: int
+    primary_res: Optional[InvokeResult] = None
+    hedge_res: Optional[InvokeResult] = None
+
+
 class Router:
     def __init__(self, cluster: Cluster, client: str = "client",
                  hedge_after_ms: Optional[float] = None):
@@ -54,8 +87,13 @@ class Router:
         self.hedge_after_ms = hedge_after_ms
         self.stats = RouterStats()
         self.sessions: Dict[str, Session] = {}
-        # engine tickets in flight through this router: ticket -> (fn, session)
-        self._inflight: Dict[int, Tuple[str, Optional[str]]] = {}
+        # engine tickets in flight through this router (primary tickets only)
+        self._inflight: Dict[int, _InFlight] = {}
+        # hedged pairs, keyed by BOTH member tickets (same _Hedge object)
+        self._hedges: Dict[int, _Hedge] = {}
+        # deploy-time traces are static, so read-only-ness per fn is too:
+        # cache it off the hedging hot path (is_read_only walks call graphs)
+        self._ro_cache: Dict[str, bool] = {}
 
     # ------------------------------------------------------------------ picks
     def candidates(self, fn_name: str) -> List[str]:
@@ -71,18 +109,29 @@ class Router:
             raise KeyError(f"no live deployment of {fn_name}")
         if session is not None:
             spec = self.cluster.specs[fn_name]
-            kg = spec.keygroups[0] if spec.keygroups else None
-            if kg is not None:
+            if spec.keygroups:
                 for n in cands:
-                    vv = np.asarray(self.cluster.store_of(kg, n).vv) \
-                        if kg in self.cluster.nodes[n].stores else None
-                    if vv is not None and session.can_read_from(vv):
+                    if self._satisfies(spec, n, session):
                         if n != cands[0]:
                             self.stats.redirects_for_consistency += 1
                         return n
                 # nobody satisfies yet -> nearest replica; caller may retry
                 return cands[0]
         return cands[0]
+
+    def _satisfies(self, spec, node: str, session: Session) -> bool:
+        """Whether serving ``spec`` at ``node`` can satisfy the session.
+        The version vector that decides lives at the STORE the candidate's
+        kv ops would actually hit (placement-resolved, as in ``_observe``):
+        under PEER_FETCH/CLOUD_CENTRAL that is the owner/cloud node, not
+        the serving candidate — checking the candidate's own (empty)
+        stores made every session read fall through, or bogusly redirect
+        to the owner replica."""
+        kg, store_node, _ = self.cluster._resolve_placement(spec, node)
+        snd = self.cluster.nodes[store_node]
+        if kg not in snd.stores:
+            return False
+        return session.can_read_from(np.asarray(snd.stores[kg].vv))
 
     def _session(self, session_id: Optional[str]) -> Optional[Session]:
         if session_id is None:
@@ -158,50 +207,235 @@ class Router:
         """Enqueue one invocation on the cluster's batched engine, routed
         through the same nearest-replica/session pick as ``invoke``.  The
         returned ticket is redeemed by ``pump``/``flush``, which also fold
-        the result back into the session.  Hedging does not apply to the
-        batched path (a coalescing server owns the whole batch timeline)."""
+        the result back into the session.  With ``hedge_after_ms`` set,
+        read-only requests whose window outlives the hedge deadline are
+        hedged at the next ``pump`` (windowed hedge, see module docstring)."""
         session = self._session(session_id)
         node = self.pick(fn_name, session)
         self.stats.requests += 1
         ticket = self.cluster.engine.submit(fn_name, node, x, t_send=t_send,
                                             client=self.client,
                                             payload_bytes=payload_bytes)
-        self._inflight[ticket] = (fn_name, session_id)
+        self._inflight[ticket] = _InFlight(fn_name, session_id, x, t_send,
+                                           node, payload_bytes)
         return ticket
 
-    def pump(self, until_t: float = math.inf) -> Dict[int, InvokeResult]:
-        """Advance the engine's background flusher to ``until_t`` and fold
-        every completed request of this router into its session.  Returns
-        only THIS router's tickets — results of tickets submitted by other
-        callers of the shared engine are handed back for their owner's next
-        pump/flush."""
-        return self._fold(self.cluster.engine.pump(until_t))
+    def pump(self, until_t: Optional[float] = None,
+             hedge: bool = True) -> Dict[int, InvokeResult]:
+        """Advance the engine's background flusher to ``until_t`` (the
+        engine clock's current time when omitted and a clock is plugged)
+        and fold every completed request of this router into its session.
+        Fires due windowed hedges first, so a hedge submitted at its fire
+        instant can still join this pump's flush cycle; pass
+        ``hedge=False`` when draining at shutdown — every wait is about to
+        end anyway, so firing duplicates would only waste dispatches.
+        Returns only THIS router's tickets — results of tickets submitted
+        by other callers of the shared engine are handed back for their
+        owner's next pump/flush."""
+        eng = self.cluster.engine
+        if until_t is None:
+            until_t = eng.now()     # the one clock-resolution convention
+        if hedge:
+            self._maybe_hedge(until_t)
+        return self._fold(eng.pump(until_t))
 
     def flush(self) -> Dict[int, InvokeResult]:
         """Drain the engine regardless of window deadlines (own tickets
-        only, like ``pump``)."""
+        only, like ``pump``).  No hedges fire: flushing ends every wait
+        immediately, so no window outlives its hedge deadline."""
         return self._fold(self.cluster.engine.flush())
+
+    def tracks(self, ticket: int) -> bool:
+        """Whether ``ticket`` can still produce a result through this
+        router (in flight, or a member of an unresolved hedged pair).  A
+        serving loop fails the request's future once this turns False."""
+        return ticket in self._inflight or ticket in self._hedges
+
+    def reconcile(self) -> Dict[int, InvokeResult]:
+        """Settle state after a flush cycle RAISED: the failing group's
+        tickets are gone from the engine but ``_fold`` never ran.  Pumping
+        to ``-inf`` dispatches nothing — it only redeems results the
+        failed cycle already stashed (groups that completed cleanly) — and
+        the fold prunes tickets that can no longer complete, so a serving
+        loop can fail their futures instead of hanging them."""
+        return self._fold(self.cluster.engine.pump(-math.inf))
+
+    def next_deadline(self) -> Optional[float]:
+        """Earliest virtual instant at which this router has scheduled
+        work: the engine's next window close, or an in-flight read-only
+        ticket's hedge fire time, whichever comes first.  ``None`` when
+        nothing is queued — the wall-clock serving loop sleeps exactly
+        until this instant."""
+        due = []
+        if (d := self.cluster.engine.next_deadline()) is not None:
+            due.append(d)
+        due.extend(hd for _, _, hd in self._hedgeable())
+        return min(due) if due else None
+
+    def _read_only(self, fn_name: str) -> bool:
+        ro = self._ro_cache.get(fn_name)
+        if ro is None:
+            ro = self._ro_cache[fn_name] = self.cluster.is_read_only(fn_name)
+        return ro
+
+    def _hedgeable(self) -> List:
+        """(ticket, meta, hedge instant) for every READ-ONLY in-flight
+        ticket still queued in a window that outlives its hedge deadline,
+        with the fire decision still open — the ONE eligibility rule
+        shared by ``next_deadline`` (when to wake) and ``_maybe_hedge``
+        (what to fire).  A mutating ticket is decided (suppressed) the
+        first time it qualifies, so the serving loop never schedules a
+        wakeup at a hedge instant that cannot fire."""
+        if self.hedge_after_ms is None or not self._inflight:
+            return []
+        queued = {p["ticket"]: p["deadline"]
+                  for p in self.cluster.engine.pending()}
+        out = []
+        for t, m in self._inflight.items():
+            if m.hedge_decided:
+                continue
+            dl = queued.get(t)
+            hd = m.t_send + self.hedge_after_ms
+            if dl is None or dl <= hd:
+                continue            # dispatched, or window beats the hedge
+            if not self._read_only(m.fn):
+                m.hedge_decided = True      # can never hedge: decide now
+                self.stats.hedges_suppressed += 1
+                continue
+            out.append((t, m, hd))
+        return out
+
+    def _maybe_hedge(self, until_t: float) -> None:
+        """Fire the windowed hedge for every queued read-only ticket whose
+        window outlives its hedge deadline (``t_send + hedge_after_ms``),
+        once the pump horizon has reached that instant.  The duplicate is
+        submitted to the nearest other replica that can still satisfy the
+        request's session, with the hedge instant as its send time —
+        deterministic in virtual time, independent of pump cadence."""
+        for ticket, m, hd in self._hedgeable():
+            if until_t < hd:
+                continue            # the hedge instant is still ahead
+            m.hedge_decided = True  # one fire decision per ticket
+            alt = self._hedge_target(m)
+            if alt is None:
+                continue            # no second replica can serve this one
+            self.stats.hedges_fired += 1
+            ht = self.cluster.engine.submit(m.fn, alt, m.x, t_send=hd,
+                                            client=self.client,
+                                            payload_bytes=m.payload_bytes)
+            pair = _Hedge(primary=ticket, hedge=ht)
+            self._hedges[ticket] = self._hedges[ht] = pair
+
+    def _hedge_target(self, m: _InFlight) -> Optional[str]:
+        """Nearest replica other than the primary's that can serve the
+        request — honouring the session's consistency requirement exactly
+        like ``pick``, so a hedge never wins with a stale read."""
+        session = (self.sessions.get(m.session_id)
+                   if m.session_id is not None else None)
+        spec = self.cluster.specs[m.fn]
+        for n in self.candidates(m.fn):
+            if n == m.node:
+                continue
+            if (session is None or not spec.keygroups
+                    or self._satisfies(spec, n, session)):
+                return n
+        return None
 
     def _fold(self, results: Dict[int, InvokeResult]) -> Dict[int, InvokeResult]:
         mine: Dict[int, InvokeResult] = {}
         foreign: Dict[int, InvokeResult] = {}
+        touched: List[_Hedge] = []
         for ticket, res in results.items():
+            pair = self._hedges.get(ticket)
+            if pair is not None:
+                if ticket == pair.primary:
+                    pair.primary_res = res
+                else:
+                    pair.hedge_res = res
+                if pair not in touched:
+                    touched.append(pair)
+                continue
             if ticket not in self._inflight:
                 foreign[ticket] = res     # another submitter's: not ours
                 continue
-            fn_name, session_id = self._inflight.pop(ticket)
-            session = self.sessions.get(session_id) if session_id else None
-            if session is not None:
-                self._observe(session, fn_name, res)
             mine[ticket] = res
+            self._finish(ticket, res)
+        queued = {p["ticket"]: p["deadline"]
+                  for p in self.cluster.engine.pending()}
+        for pair in touched:
+            res = self._try_resolve_hedge(pair, queued)
+            if res is not None:
+                mine[pair.primary] = res
         if foreign:
             self.cluster.engine.hold_results(foreign)
         # prune in-flight tickets that can no longer complete: not in this
         # drain and no longer queued — dropped by a failed cycle's
         # at-most-once contract or discarded via engine.discard
         if self._inflight:
-            queued = {p["ticket"] for p in self.cluster.engine.pending()}
             for t in [t for t in self._inflight
                       if t not in results and t not in queued]:
-                del self._inflight[t]
+                pair = self._hedges.get(t)
+                if pair is not None:
+                    if pair in touched or pair.hedge in queued:
+                        continue    # just handled / duplicate still possible
+                    held = pair.primary_res or pair.hedge_res
+                    if held is not None:
+                        # partner died while we held a completion: settle
+                        mine[pair.primary] = self._settle(
+                            pair, held, held is pair.hedge_res)
+                    else:           # both members dead: unredeemable
+                        del self._hedges[pair.primary]
+                        del self._hedges[pair.hedge]
+                        del self._inflight[t]
+                else:
+                    del self._inflight[t]
         return mine
+
+    def _try_resolve_hedge(self, pair: _Hedge, queued: Dict[int, float]
+                           ) -> Optional[InvokeResult]:
+        """Settle a hedged pair on the EARLIER completion.  With only one
+        member complete, the pair settles early iff the partner provably
+        cannot beat it — without flush-on-full a queued partner completes
+        no sooner than its window's close, so a present result at or
+        before that close wins and the loser is discarded before it ever
+        dispatches (with ``max_batch`` set the window could fill and
+        dispatch early, so the pair waits for the partner instead).
+        Returns ``None`` while genuinely undecided."""
+        pr, hr = pair.primary_res, pair.hedge_res
+        if pr is not None and hr is not None:
+            hedge_won = hr.t_received < pr.t_received
+            return self._settle(pair, hr if hedge_won else pr, hedge_won)
+        present, missing = (pr, pair.hedge) if hr is None else (hr, pair.primary)
+        deadline = queued.get(missing)
+        if deadline is None:
+            # partner dead (failed cycle / discarded): present completes
+            return self._settle(pair, present, hr is not None)
+        if (self.cluster.engine.max_batch is None
+                and present.t_received <= deadline):
+            # the no-sooner-than-the-close bound only holds without
+            # flush-on-full: with max_batch set the partner's window could
+            # fill and dispatch BEFORE its deadline, so wait for it instead
+            self.cluster.engine.discard(missing)    # loser never dispatches
+            return self._settle(pair, present, hr is not None)
+        return None
+
+    def _settle(self, pair: _Hedge, winner: InvokeResult,
+                hedge_won: bool) -> InvokeResult:
+        if hedge_won:
+            self.stats.hedge_wins += 1
+            # re-stamp the winner against the PRIMARY's send instant: the
+            # hedge's own t_send is the later fire time, and the client
+            # observes latency from its original submission
+            t0 = self._inflight[pair.primary].t_send
+            winner = dataclasses.replace(
+                winner, t_sent=t0, response_ms=winner.t_received - t0)
+        del self._hedges[pair.primary], self._hedges[pair.hedge]
+        self._finish(pair.primary, winner)
+        return winner
+
+    def _finish(self, ticket: int, res: InvokeResult) -> None:
+        m = self._inflight.pop(ticket)
+        session = (self.sessions.get(m.session_id)
+                   if m.session_id is not None else None)
+        if session is not None:
+            self._observe(session, m.fn, res)

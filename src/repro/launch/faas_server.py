@@ -1,0 +1,304 @@
+"""Wall-clock serving loop: host the batched invocation engine as a server.
+
+Everything below ``launch/`` up to now drives the engine in VIRTUAL time —
+explicit ``pump(until_t)`` calls.  ``FaasServer`` closes the loop for real
+deployments: client threads ``submit`` requests whose send instants are
+taken from a wall clock, a single serving thread maps that wall clock onto
+the engine's virtual timeline (``engine.use_clock``), and instead of
+polling it sleeps EXACTLY until the next scheduled instant —
+``router.next_deadline()``, the earlier of the engine's next window close
+and the next windowed-hedge fire time.  A new submission can only move
+that horizon earlier, so the condition variable doubles as the wakeup: a
+submit notifies the loop, the loop re-queries, and the sleep re-arms.
+
+Timeline mapping: virtual time (ms) = wall time since ``start()`` ×
+``time_scale``.  ``time_scale=1`` serves in real time; larger values
+compress the emulated network's milliseconds for tests and benchmarks
+(a 5 ms window at ``time_scale=100`` closes after 50 µs of wall time).
+
+Concurrency model: ONE lock guards the cluster/engine/router (JAX
+dispatches happen while holding it, from whichever thread flushes).  The
+serving thread owns ``pump``; client threads own ``submit`` (which may
+auto-flush a full window — serialized by the same lock).  Results resolve
+``ServedRequest`` futures; a ticket dropped by a failed cycle's
+at-most-once contract fails its future instead of hanging it.
+
+    cluster.deploy(...)
+    with FaasServer(cluster, window_ms=8.0, hedge_after_ms=4.0,
+                    time_scale=50.0) as srv:
+        futs = [srv.submit("fn", x, session_id="s") for x in xs]
+        outs = [f.result(timeout=5.0) for f in futs]
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+import time
+from concurrent import futures
+from typing import Any, Dict, List, Optional
+
+from repro.core.cluster import Cluster, InvokeResult
+from repro.core.router import Router
+
+
+class RequestLost(RuntimeError):
+    """The request's ticket can no longer complete (dropped by a failed
+    flush cycle or discarded) — at-most-once, the client should re-submit."""
+
+
+class ServedRequest(futures.Future):
+    """Future for one submitted request (resolved by the serving loop):
+    a stdlib ``concurrent.futures.Future`` carrying the ticket and the
+    request's virtual send instant."""
+
+    def __init__(self, ticket: int, fn: str, t_send: float):
+        super().__init__()
+        self.ticket = ticket
+        self.fn = fn
+        self.t_send = t_send            # virtual send instant (ms)
+
+
+@dataclasses.dataclass
+class ServerStats:
+    submitted: int = 0
+    served: int = 0
+    lost: int = 0                   # futures failed (at-most-once drops)
+    pumps: int = 0                  # pump passes that delivered results
+    wakeups: int = 0                # loop iterations (submits + deadlines)
+    cycle_errors: int = 0           # exceptions a flush cycle raised
+
+
+class FaasServer:
+    """Thread-driven wall-clock host for ``BatchedInvocationEngine``."""
+
+    def __init__(self, cluster: Cluster, window_ms: float = 8.0,
+                 max_batch: Optional[int] = None,
+                 hedge_after_ms: Optional[float] = None,
+                 client: str = "client", time_scale: float = 1.0):
+        if time_scale <= 0:
+            raise ValueError("time_scale must be > 0")
+        if window_ms is None or not math.isfinite(window_ms) or window_ms < 0:
+            # None is the engine's no-windowing sentinel, and inf/nan give
+            # windows that never come due: every future would hang until
+            # stop().  The server needs a real close instant to sleep to
+            raise ValueError("FaasServer requires a finite window_ms >= 0")
+        self.cluster = cluster
+        self.router = Router(cluster, client=client,
+                             hedge_after_ms=hedge_after_ms)
+        self.time_scale = time_scale
+        self.stats = ServerStats()
+        self.response_ms: List[float] = []      # virtual latency per serve
+        self.window_ms = window_ms
+        self.max_batch = max_batch
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._futures: Dict[int, ServedRequest] = {}
+        self._epoch: Optional[float] = None
+        self._running = False
+        self._thread: Optional[threading.Thread] = None
+        # the cluster's shared engine is only touched between start() and
+        # stop(): prior knobs/clock are saved then and restored after
+        self._saved_engine_state = None
+
+    # ------------------------------------------------------------------ clock
+    def now(self) -> float:
+        """Current VIRTUAL time (ms): wall time since start × time_scale."""
+        if self._epoch is None:
+            return 0.0
+        return (time.perf_counter() - self._epoch) * 1e3 * self.time_scale
+
+    def _to_wall_s(self, virtual_ms: float) -> float:
+        return virtual_ms / (1e3 * self.time_scale)
+
+    # -------------------------------------------------------------- lifecycle
+    def start(self) -> "FaasServer":
+        if self._running:
+            return self
+        eng = self.cluster.engine
+        self._saved_engine_state = (eng.window_ms, eng.max_batch, eng.clock)
+        eng.configure(window_ms=self.window_ms, max_batch=self.max_batch)
+        eng.use_clock(self.now)
+        self._epoch = time.perf_counter()
+        self._running = True
+        self._thread = threading.Thread(target=self._serve_loop,
+                                        name="faas-server", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the loop; with ``drain`` every still-queued window is pumped
+        out (charged its full wait, as if the deadline passed) so no future
+        is left hanging."""
+        with self._cond:
+            self._running = False
+            self._cond.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if drain:
+            with self._cond:
+                try:
+                    # hedge=False: every wait ends right now, a duplicate
+                    # could never complete earlier than its primary
+                    self._deliver(self.router.pump(math.inf, hedge=False))
+                except Exception:
+                    # same contract as the serving loop: redeem what the
+                    # failed cycle stashed, fail the dropped tickets
+                    self.stats.cycle_errors += 1
+                    self._deliver(self.router.reconcile())
+                self._fail_lost()
+        # hand the CLUSTER's shared engine back exactly as we found it
+        # (knobs and clock) — the server's wall clock must not outlive it
+        if self._saved_engine_state is not None:
+            window_ms, max_batch, clock = self._saved_engine_state
+            self.cluster.engine.configure(window_ms=window_ms,
+                                          max_batch=max_batch)
+            self.cluster.engine.use_clock(clock)
+            self._saved_engine_state = None
+
+    def __enter__(self) -> "FaasServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ----------------------------------------------------------------- client
+    def submit(self, fn_name: str, x, session_id: Optional[str] = None,
+               payload_bytes: int = 64) -> ServedRequest:
+        """Enqueue one request with the CURRENT wall instant as its virtual
+        send time; wakes the serving loop so its sleep re-arms against the
+        (possibly earlier) new deadline.  Thread-safe."""
+        with self._cond:
+            if not self._running:       # checked under the lock: a submit
+                # racing stop() must fail fast, not enqueue into a drained
+                # engine and hang its future
+                raise RuntimeError(
+                    "server not started (use start() or `with`)")
+            t_send = self.now()
+            try:
+                ticket = self.router.submit(fn_name, x, t_send=t_send,
+                                            session_id=session_id,
+                                            payload_bytes=payload_bytes)
+            except Exception:
+                # a full window auto-flushes ON THIS THREAD and the cycle
+                # can raise, dropping the window (at-most-once).  Settle
+                # the damage before re-raising to this caller: redeem what
+                # the cycle stashed, fail the dropped tickets' futures
+                self.stats.cycle_errors += 1
+                self._deliver(self.router.reconcile())
+                self._fail_lost()
+                self._cond.notify_all()
+                raise
+            fut = ServedRequest(ticket, fn_name, t_send)
+            self._futures[ticket] = fut
+            self.stats.submitted += 1
+            self._cond.notify_all()
+        return fut
+
+    # ------------------------------------------------------------ serving loop
+    def _serve_loop(self) -> None:
+        with self._cond:
+            while self._running:
+                self.stats.wakeups += 1
+                try:
+                    self._deliver(self.router.pump(self.now()))
+                except Exception:
+                    # a failed flush cycle dropped its group (at-most-once);
+                    # surviving windows stay queued.  The router never saw
+                    # a result set, so reconcile: redeem what the cycle
+                    # stashed and prune the dropped tickets — their futures
+                    # fail below instead of hanging
+                    self.stats.cycle_errors += 1
+                    self._deliver(self.router.reconcile())
+                self._fail_lost()
+                nxt = self.router.next_deadline()
+                if nxt is None:
+                    self._cond.wait()           # until a submit or stop
+                    continue
+                delay = self._to_wall_s(nxt - self.now())
+                if delay > 0:
+                    # sleep EXACTLY until the next window close/hedge fire;
+                    # a submit notifies and the loop re-arms
+                    self._cond.wait(timeout=delay)
+
+    def _deliver(self, results: Dict[int, InvokeResult]) -> None:
+        if results:
+            self.stats.pumps += 1
+        for ticket, res in results.items():
+            fut = self._futures.pop(ticket, None)
+            if fut is None:
+                continue
+            self.stats.served += 1
+            # the router re-stamps hedge winners against the primary's
+            # send instant, so response_ms IS the client-observed latency
+            self.response_ms.append(res.response_ms)
+            fut.set_result(res)
+
+    def _fail_lost(self) -> None:
+        """Fail futures whose tickets the router no longer tracks (dropped
+        by a failed cycle or discarded) — they can never resolve."""
+        if not self._futures:
+            return
+        for t in [t for t in self._futures if not self.router.tracks(t)]:
+            fut = self._futures.pop(t)
+            self.stats.lost += 1
+            fut.set_exception(RequestLost(
+                f"ticket {t} ({fut.fn!r}) dropped before completing"))
+
+
+def serve_open_loop(server: FaasServer, fn_name: str, make_input,
+                    n_requests: int, rate_per_ms: float = 1.0,
+                    timeout_s: float = 30.0,
+                    session_id: Optional[str] = None) -> List[Any]:
+    """Open-loop driver: submissions at a fixed arrival rate
+    (``rate_per_ms`` per VIRTUAL millisecond, i.e. wall rate ×
+    ``server.time_scale``), regardless of completions — the paper's open
+    workload.  Returns all InvokeResults in submission order."""
+    spacing_s = 1.0 / (rate_per_ms * 1e3 * server.time_scale)
+    futs = []
+    for i in range(n_requests):
+        futs.append(server.submit(fn_name, make_input(i),
+                                  session_id=session_id))
+        time.sleep(spacing_s)
+    return [f.result(timeout=timeout_s) for f in futs]
+
+
+def serve_closed_loop(server: FaasServer, fn_name: str, make_input,
+                      n_requests: int, concurrency: int = 4,
+                      timeout_s: float = 30.0,
+                      session_prefix: Optional[str] = None) -> List[Any]:
+    """Closed-loop driver: ``concurrency`` client threads, each submitting
+    its next request as soon as the previous one completes (the paper's
+    §4.2 closed workload).  Returns all InvokeResults."""
+    results: List[Any] = []
+    errors: List[BaseException] = []
+    lock = threading.Lock()
+    counter = iter(range(n_requests))
+
+    def client(cid: int):
+        sid = f"{session_prefix}{cid}" if session_prefix else None
+        while True:
+            with lock:
+                i = next(counter, None)
+            if i is None:
+                return
+            try:
+                fut = server.submit(fn_name, make_input(i), session_id=sid)
+                res = fut.result(timeout=timeout_s)
+            except BaseException as e:    # surfaced after join, not stderr
+                with lock:
+                    errors.append(e)
+                return
+            with lock:
+                results.append(res)
+
+    threads = [threading.Thread(target=client, args=(c,), daemon=True)
+               for c in range(concurrency)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if errors:
+        raise errors[0]
+    return results

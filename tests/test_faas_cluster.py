@@ -137,3 +137,39 @@ def test_staleness_writelog():
     assert log.staleness_of_read(25.0, 2) == 0.0
     assert log.staleness_of_read(25.0, 1) == 5.0   # overwritten at t=20
     assert log.latest_at(15.0) == 1
+
+
+def test_staleness_writelog_out_of_order_adds():
+    """Replicated writes ARRIVE out of apply-time order by design: the log
+    must insertion-sort its records so bisect-backed queries see the same
+    answers as an in-order feed (regression for the unsorted-scan
+    version, which assumed in-order add)."""
+    log = WriteLog()
+    for t, p in [(20.0, 2), (5.0, 1), (35.0, 4), (28.0, 3)]:
+        log.add(t, p)
+    assert log.records == [(5.0, 1), (20.0, 2), (28.0, 3), (35.0, 4)]
+    assert log.latest_at(1.0) is None
+    assert log.latest_at(30.0) == 3
+    assert log.latest_at(100.0) == 4
+    # payload 1 was first overwritten at t=20
+    assert log.staleness_of_read(30.0, 1) == 10.0
+    # payload 2 was first overwritten at t=28
+    assert log.staleness_of_read(40.0, 2) == 12.0
+    assert log.staleness_of_read(30.0, 3) == 0.0   # newest applied by t=30
+    # a read BEFORE any overwrite applied is fresh
+    assert log.staleness_of_read(19.0, 1) == 0.0
+
+
+def test_staleness_writelog_non_comonotonic_feed_stays_exact():
+    """If a feed ever violates the single-client contract (payload ids not
+    co-monotonic with apply times), staleness must fall back to the exact
+    scan rather than bisecting a payload-unsorted list."""
+    log = WriteLog()
+    for t, p in [(10.0, 5), (20.0, 3), (30.0, 6)]:
+        log.add(t, p)
+    # the earliest newer-payload record applied by t=35 is (10.0, 5):
+    # a bisect on the time-sorted list keyed by payload would miss it
+    assert log.staleness_of_read(35.0, 3) == 25.0
+    assert log.staleness_of_read(35.0, 5) == 5.0   # overwritten by 6 at 30
+    assert log.staleness_of_read(35.0, 6) == 0.0
+    assert log.latest_at(25.0) == 3                # latest applied by t=25

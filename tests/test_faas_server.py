@@ -1,0 +1,349 @@
+"""Wall-clock serving loop + windowed hedging: hedge state machine
+determinism (fired only for read-only handlers past the hedge deadline,
+earlier completion wins, losers that never dispatched are discarded),
+next_deadline() monotonicity at both the engine and router levels, and a
+bounded-sleep FaasServer smoke test with a deterministic result set."""
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ReplicationPolicy
+from repro.core import Cluster, Router, enoki_function, get_function
+from repro.core.store import store_contents
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@enoki_function(name="fs_bump", keygroups=["fskg"], codec_width=4)
+def fs_bump(kv, x):
+    cur, found = kv.get("c")
+    new = jnp.where(found, cur[0] + 1.0, 1.0)
+    kv.set("c", jnp.stack([new, 0.0, 0.0, 0.0]))
+    return jnp.stack([new])
+
+
+@enoki_function(name="fs_peek", keygroups=["fskg"], codec_width=4)
+def fs_peek(kv, x):
+    cur, found = kv.get("c")
+    return cur[:1]
+
+
+def _cluster():
+    return Cluster({"edge": "edge", "edge2": "edge", "cloud": "cloud"},
+                   measure_compute=False)
+
+
+def _deploy_both(c, policy=ReplicationPolicy.REPLICATED):
+    c.deploy(get_function("fs_bump"), ["edge", "edge2"], policy=policy)
+    c.deploy(get_function("fs_peek"), ["edge", "edge2"], policy=policy)
+    c.invoke("fs_bump", "edge", jnp.zeros((1,)))     # seed state
+    c.flush_replication()
+
+
+def _x():
+    return np.zeros(4, np.float32)
+
+
+def _count(c, node):
+    contents = store_contents(c.nodes[node].stores["fskg"])
+    return list(contents.values())[0][2][0] if contents else 0.0
+
+
+def _pump_all(router, n):
+    """Drive pump deadline-by-deadline, exactly like the serving loop."""
+    out = {}
+    while len(out) < n:
+        nd = router.next_deadline()
+        if nd is None:
+            out.update(router.pump(math.inf))
+            break
+        out.update(router.pump(nd))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# windowed hedging
+# ---------------------------------------------------------------------------
+
+def test_windowed_hedge_wins_on_straggler_and_takes_earlier_completion():
+    """Nearest replica straggles: the hedge fired at t_send+hedge_after_ms
+    to the second replica completes earlier and is the result reported
+    under the primary ticket."""
+    c = _cluster()
+    _deploy_both(c)
+    c.set_compute_ms("edge", "fs_peek", 50.0)       # straggler
+    c.engine.configure(window_ms=20.0)
+    router = Router(c, hedge_after_ms=5.0)
+    t = router.submit("fs_peek", _x(), t_send=0.0)
+    out = _pump_all(router, 1)
+    assert set(out) == {t}
+    assert router.stats.hedges_fired == 1
+    assert router.stats.hedge_wins == 1
+    assert out[t].node == "edge2"                   # hedge's replica won
+    # the winner is re-stamped against the PRIMARY's send instant: the
+    # client observes latency from its original submission
+    assert out[t].t_sent == 0.0
+    assert out[t].response_ms == pytest.approx(out[t].t_received)
+    # unhedged run for comparison: strictly slower completion
+    c2 = _cluster()
+    _deploy_both(c2)
+    c2.set_compute_ms("edge", "fs_peek", 50.0)
+    c2.engine.configure(window_ms=20.0)
+    plain = Router(c2)
+    t2 = plain.submit("fs_peek", _x(), t_send=0.0)
+    ref = _pump_all(plain, 1)
+    assert out[t].t_received < ref[t2].t_received
+    assert router._inflight == {} and router._hedges == {}
+
+
+def test_windowed_hedge_loser_discarded_before_dispatch():
+    """Without a straggler the primary wins at its window close, before the
+    hedge's window closes — the hedge is discarded undipatched (at-most-
+    once: exactly one batch dispatch serves the request)."""
+    c = _cluster()
+    _deploy_both(c)
+    c.engine.configure(window_ms=20.0)
+    router = Router(c, hedge_after_ms=5.0)
+    base_dispatch = c.engine.stats.dispatches
+    t = router.submit("fs_peek", _x(), t_send=0.0)
+    out = _pump_all(router, 1)
+    assert set(out) == {t}
+    assert out[t].node == "edge"                    # primary won
+    assert router.stats.hedges_fired == 1
+    assert router.stats.hedge_wins == 0
+    assert c.engine.stats.dispatches == base_dispatch + 1   # loser never ran
+    assert c.engine.pending() == []                 # ...and is not queued
+    assert router._inflight == {} and router._hedges == {}
+
+
+def test_hedge_only_fires_for_read_only_handlers():
+    """A mutating handler must never hedge (double-apply): suppressed and
+    counted, and the counter advances exactly once."""
+    c = _cluster()
+    _deploy_both(c)
+    c.engine.configure(window_ms=20.0)
+    router = Router(c, hedge_after_ms=5.0)
+    t = router.submit("fs_bump", _x(), t_send=0.0)
+    out = _pump_all(router, 1)
+    assert set(out) == {t}
+    assert router.stats.hedges_fired == 0
+    assert router.stats.hedges_suppressed == 1
+    c.flush_replication()
+    assert _count(c, "edge") == _count(c, "edge2") == 2.0   # seed + one bump
+
+
+def test_hedge_not_fired_when_window_beats_the_deadline():
+    """A window closing BEFORE the hedge deadline never hedges — the batch
+    completes within the hedge budget."""
+    c = _cluster()
+    _deploy_both(c)
+    c.engine.configure(window_ms=4.0)
+    router = Router(c, hedge_after_ms=30.0)
+    t = router.submit("fs_peek", _x(), t_send=0.0)
+    out = _pump_all(router, 1)
+    assert set(out) == {t}
+    assert router.stats.hedges_fired == 0
+    assert router.stats.hedges_suppressed == 0
+
+
+def test_windowed_hedge_deterministic_across_pump_cadence():
+    """One coarse pump(inf) and deadline-by-deadline pumping produce the
+    same completion (same winner, same t_received) and the same hedge
+    stats — the hedge fires at a virtual instant, not at a pump call."""
+    outs, stats = [], []
+    for coarse in (False, True):
+        c = _cluster()
+        _deploy_both(c)
+        c.set_compute_ms("edge", "fs_peek", 50.0)
+        c.engine.configure(window_ms=20.0)
+        router = Router(c, hedge_after_ms=5.0)
+        t = router.submit("fs_peek", _x(), t_send=0.0)
+        out = (router.pump(math.inf) if coarse else _pump_all(router, 1))
+        outs.append(out[t])
+        stats.append((router.stats.hedges_fired, router.stats.hedge_wins))
+    assert stats[0] == stats[1] == (1, 1)
+    assert outs[0].t_received == outs[1].t_received
+    assert outs[0].node == outs[1].node == "edge2"
+
+
+def test_hedge_waits_for_partner_under_flush_on_full():
+    """With max_batch set, a queued partner's window can fill and dispatch
+    BEFORE its deadline, so the early-settle shortcut (present result beats
+    the partner's window close) is unsound — the pair must wait for the
+    partner's actual completion instead of discarding it."""
+    c = _cluster()
+    _deploy_both(c)
+    c.engine.configure(window_ms=20.0, max_batch=8)
+    router = Router(c, hedge_after_ms=5.0)
+    t = router.submit("fs_peek", _x(), t_send=0.0)
+    assert router.pump(5.0) == {}               # hedge fires here
+    assert router.stats.hedges_fired == 1
+    out = router.pump(21.0)                     # primary window drains...
+    assert out == {}                            # ...but the pair WAITS
+    assert len(c.engine.pending()) == 1         # hedge still queued
+    out = _pump_all(router, 1)                  # hedge completes -> settle
+    assert set(out) == {t}
+    assert out[t].node == "edge"                # primary still won
+    assert router.stats.hedge_wins == 0
+    assert router._inflight == {} and router._hedges == {}
+
+
+def test_hedge_respects_session_consistency():
+    """A hedge must never win with a STALE read: when the only alternate
+    replica cannot satisfy the session (replication pending), the hedge is
+    skipped and the request completes at the session's replica."""
+    c = _cluster()
+    _deploy_both(c)
+    c.engine.configure(window_ms=20.0)
+    router = Router(c, hedge_after_ms=5.0)
+    # write at the FAR replica; session observes edge2's store, edge lags
+    res = c.invoke("fs_bump", "edge2", jnp.zeros((1,)))
+    session = router._session("s")
+    router._observe(session, "fs_bump", res)
+    t = router.submit("fs_peek", _x(), t_send=0.0, session_id="s")
+    assert router.pick("fs_peek", session) == "edge2"   # sanity: edge stale
+    out = _pump_all(router, 1)
+    assert set(out) == {t}
+    assert router.stats.hedges_fired == 0       # no satisfying alternate
+    assert out[t].node == "edge2"
+    # the session read actually saw its own write
+    assert float(np.asarray(out[t].output)[0]) == 2.0   # seed + far write
+
+
+# ---------------------------------------------------------------------------
+# next_deadline
+# ---------------------------------------------------------------------------
+
+def test_engine_next_deadline_monotone_across_pumps():
+    c = _cluster()
+    _deploy_both(c)
+    c.engine.configure(window_ms=10.0)
+    assert c.engine.next_deadline() is None
+    c.engine.submit("fs_peek", "edge", _x(), t_send=0.0)
+    d1 = c.engine.next_deadline()
+    assert d1 is not None
+    c.engine.submit("fs_peek", "edge", _x(), t_send=2.0)    # joins the window
+    assert c.engine.next_deadline() == d1
+    c.engine.submit("fs_peek", "edge", _x(), t_send=50.0)   # later window
+    assert c.engine.next_deadline() == d1                   # earliest wins
+    c.engine.pump(d1)
+    d2 = c.engine.next_deadline()
+    assert d2 is not None and d2 > d1                       # monotone
+    c.engine.pump(d2)
+    assert c.engine.next_deadline() is None
+    assert c.engine.pending() == []
+
+
+def test_router_next_deadline_covers_hedge_fire_times():
+    """The router's horizon is the EARLIER of the engine's next window
+    close and a queued read-only ticket's hedge instant, and it advances
+    monotonically as the serving loop pumps."""
+    c = _cluster()
+    _deploy_both(c)
+    c.engine.configure(window_ms=20.0)
+    router = Router(c, hedge_after_ms=5.0)
+    router.submit("fs_peek", _x(), t_send=0.0)
+    window_close = c.engine.next_deadline()
+    d1 = router.next_deadline()
+    assert d1 == pytest.approx(5.0)                 # hedge fires first
+    assert d1 < window_close
+    router.pump(d1)                                 # hedge fired here
+    d2 = router.next_deadline()
+    assert d2 == window_close                       # next: primary's close
+    router.pump(d2)
+    d3 = router.next_deadline()
+    assert d3 is None or d3 > d2                    # hedge window or done
+    _pump_all(router, 1)
+    assert router.next_deadline() is None
+
+
+def test_unclocked_pump_without_argument_still_drains_everything():
+    """Back-compat: pump() with no clock plugged means pump(inf)."""
+    c = _cluster()
+    _deploy_both(c)
+    c.engine.configure(window_ms=5.0)
+    t = c.engine.submit("fs_peek", "edge", _x(), t_send=0.0)
+    assert set(c.engine.pump()) == {t}
+
+
+# ---------------------------------------------------------------------------
+# the wall-clock server
+# ---------------------------------------------------------------------------
+
+def test_faas_server_smoke_bounded_and_deterministic():
+    """Real threads, real sleeps, bounded wall time: every future resolves,
+    the counter advances exactly once per request (deterministic result
+    set), and sessions hold reads-your-writes through the server."""
+    from repro.launch.faas_server import FaasServer
+    c = _cluster()
+    _deploy_both(c)
+    # warm the jit buckets outside the served window
+    for b in (1, 8, 64):
+        c.invoke_batch("fs_bump", "edge", [_x()] * b)
+    seeded = _count(c, "edge")
+    n = 12
+    t0 = time.perf_counter()
+    with FaasServer(c, window_ms=5.0, time_scale=200.0) as srv:
+        futs = [srv.submit("fs_bump", _x(), session_id="s") for _ in range(n)]
+        outs = [f.result(timeout=30.0) for f in futs]
+    elapsed = time.perf_counter() - t0
+    assert elapsed < 30.0                           # bounded, no hang
+    assert all(f.done() for f in futs)
+    assert srv.stats.served == n and srv.stats.lost == 0
+    # deterministic result set: each request saw a distinct counter value
+    vals = sorted(float(np.asarray(r.output)[0]) for r in outs)
+    assert vals == [seeded + 1.0 + i for i in range(n)]
+    c.flush_replication()
+    assert _count(c, "edge") == seeded + n
+    # the session folded every batched write (reads-your-writes holds)
+    session = srv.router.sessions["s"]
+    assert session.can_read_from(np.asarray(c.store_of("fskg", "edge").vv))
+    # virtual latency: solo latency + at most the window
+    assert all(r.response_ms <= 1.0 + 5.0 + 1.0 for r in outs)
+
+
+def test_faas_server_submit_requires_start():
+    from repro.launch.faas_server import FaasServer
+    c = _cluster()
+    _deploy_both(c)
+    srv = FaasServer(c, window_ms=5.0)
+    with pytest.raises(RuntimeError, match="not started"):
+        srv.submit("fs_peek", _x())
+    # None is the engine's no-windowing sentinel: nothing would come due
+    with pytest.raises(ValueError, match="window_ms"):
+        FaasServer(c, window_ms=None)
+
+
+def test_faas_server_stop_drains_queued_windows():
+    """stop() must not strand futures whose windows never came due."""
+    from repro.launch.faas_server import FaasServer
+    c = _cluster()
+    _deploy_both(c)
+    srv = FaasServer(c, window_ms=10_000.0, time_scale=1.0).start()
+    fut = srv.submit("fs_peek", _x())
+    srv.stop(drain=True)
+    assert fut.done()
+    assert float(np.asarray(fut.result(timeout=1.0).output)[0]) >= 1.0
+    # the server unplugged its wall clock from the cluster's shared engine
+    assert c.engine.clock is None
+
+
+def test_faas_server_lost_ticket_fails_future():
+    """A discarded ticket can never resolve: its future fails instead of
+    hanging the client (at-most-once surface)."""
+    from repro.launch.faas_server import FaasServer, RequestLost
+    c = _cluster()
+    _deploy_both(c)
+    srv = FaasServer(c, window_ms=10_000.0, time_scale=1.0).start()
+    fut = srv.submit("fs_peek", _x())
+    with srv._cond:
+        assert c.engine.discard(fut.ticket)
+        srv._cond.notify_all()
+    srv.stop(drain=True)
+    with pytest.raises(RequestLost):
+        fut.result(timeout=1.0)
+    assert srv.stats.lost == 1

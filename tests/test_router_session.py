@@ -137,6 +137,68 @@ def test_session_observes_store_node_under_peer_fetch():
 
 
 # ---------------------------------------------------------------------------
+# session routing under remote placements (Router.pick placement fix)
+# ---------------------------------------------------------------------------
+
+def test_pick_resolves_placement_no_bogus_redirect_under_peer_fetch():
+    """Regression for the pick-placement bug: under PEER_FETCH every
+    candidate's kv ops hit the OWNER store, so a session that wrote is
+    satisfiable at the nearest candidate — pre-fix, pick checked the
+    candidate's own (empty) local stores, never found the version vector,
+    and either fell through or bogusly redirected to the owner replica."""
+    c = _cluster()
+    c.deploy(get_function("rtr_counter"), ["edge", "edge2"],
+             policy=ReplicationPolicy.PEER_FETCH, owner="edge2")
+    router = Router(c)
+    r = router.invoke("rtr_counter", jnp.zeros((1,)), session_id="s")
+    assert r.node == "edge"                        # nearest candidate serves
+    session = router.sessions["s"]
+    # the satisfying vv lives at the owner; the nearest candidate resolves
+    # to it, so the session read routes to edge with NO consistency redirect
+    assert router.pick("rtr_counter", session) == "edge"
+    assert router.stats.redirects_for_consistency == 0
+    # and reads-your-writes holds end to end through that pick
+    r2 = router.invoke("rtr_counter", jnp.zeros((1,)), session_id="s",
+                       t_send=r.t_received)
+    assert r2.node == "edge"
+    assert float(np.asarray(r2.output)[0]) == 2.0
+
+
+def test_pick_resolves_placement_under_cloud_central():
+    """Same fix for CLOUD_CENTRAL: candidates hold no replica at all (the
+    store is at the cloud), yet every candidate satisfies a session once
+    the cloud vv dominates — the session read must stay at the nearest
+    edge instead of falling through 'unsatisfied'."""
+    c = _cluster()
+    c.deploy(get_function("rtr_counter"), ["edge", "edge2"],
+             policy=ReplicationPolicy.CLOUD_CENTRAL, owner="cloud")
+    router = Router(c)
+    router.invoke("rtr_counter", jnp.zeros((1,)), session_id="s")
+    session = router.sessions["s"]
+    assert session.requirement().sum() > 0         # the token demands the write
+    assert router.pick("rtr_counter", session) == "edge"
+    assert router.stats.redirects_for_consistency == 0
+
+
+def test_pick_still_redirects_to_fresher_replica_under_replicated():
+    """The REPLICATED redirect path is unchanged: while replication to the
+    nearest replica is pending, a session that observed the fresher store
+    redirects to it; once replication lands, it returns to the nearest."""
+    c = _cluster()
+    c.deploy(get_function("rtr_counter"), ["edge", "edge2"],
+             policy=ReplicationPolicy.REPLICATED)
+    router = Router(c)
+    # write at the FAR replica; the session token observes edge2's store
+    res = c.invoke("rtr_counter", "edge2", jnp.zeros((1,)))
+    session = router._session("s")
+    router._observe(session, "rtr_counter", res)
+    assert router.pick("rtr_counter", session) == "edge2"   # edge is stale
+    assert router.stats.redirects_for_consistency == 1
+    c.flush_replication()
+    assert router.pick("rtr_counter", session) == "edge"    # caught up
+
+
+# ---------------------------------------------------------------------------
 # batched router path
 # ---------------------------------------------------------------------------
 

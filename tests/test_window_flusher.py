@@ -128,11 +128,34 @@ def test_out_of_order_arrival_opens_its_own_window():
 
 
 def test_stateless_handlers_are_read_only_for_hedging():
-    """An empty op trace (no kv ops at all) is trivially safe to re-invoke."""
+    """An empty op trace (no kv ops at all) is trivially safe to re-invoke
+    — at the PER-HANDLER level; whole-invocation safety is the cluster's
+    call-graph walk (next test)."""
     from repro.core import handler_read_only
     assert handler_read_only([])
     assert handler_read_only([("get", 4), ("scan", 8)])
     assert not handler_read_only([("get", 4), ("set", 8)])
+
+
+@enoki_function(name="wf_peek", keygroups=["wfkg"], codec_width=8)
+def wf_peek(kv, x):
+    cur, found = kv.get("acc")
+    return cur[:2]
+
+
+def test_read_only_gate_covers_downstream_calls():
+    """Hedge safety is a CALL-GRAPH property: a stateless caller whose
+    callee writes must NOT be read-only (a hedged retry re-runs the whole
+    chain, double-applying the callee's writes)."""
+    c = _cluster(("edge", "cloud"))
+    c.deploy(get_function("wf_sink"), ["edge"])
+    c.deploy(get_function("wf_src_a"), ["edge"])     # stateless -> wf_sink
+    c.deploy(get_function("wf_mix"), ["edge"])
+    c.deploy(get_function("wf_peek"), ["edge"])
+    assert not c.is_read_only("wf_src_a")    # own trace empty, callee writes
+    assert not c.is_read_only("wf_sink")
+    assert not c.is_read_only("wf_mix")
+    assert c.is_read_only("wf_peek")         # get-only, no callees
 
 
 def test_pump_drains_only_due_windows():
