@@ -355,6 +355,178 @@ def run_hedge_sweep(n_requests: int = HEDGE_REQUESTS,
 
 
 # ---------------------------------------------------------------------------
+# Parallel-pump sweep: the executor-per-store-node dispatch pipeline
+# ---------------------------------------------------------------------------
+
+PARALLEL_WORKERS = [1, 4]
+PARALLEL_WINDOW_MS = 32.0       # at 2 req/ms split over 2 nodes: 64-deep
+                                # windows, bucket-exact
+PARALLEL_REQUESTS = 512
+PAR_ITEM_WIDTH = 1024           # wide enough that a dispatch is real XLA
+                                # work (the pipeline overlaps compute, not
+                                # Python bookkeeping)
+
+
+@enoki_function(name="fig4_par_read", keygroups=["fig4parkg"],
+                codec_width=PAR_ITEM_WIDTH)
+def fig4_par_read(kv, x):
+    val, found = kv.get("item")
+    return val[:1] + x[:1]
+
+
+@enoki_function(name="fig4_par_write", keygroups=["fig4parkg"],
+                codec_width=PAR_ITEM_WIDTH)
+def fig4_par_write(kv, x):
+    cur, _ = kv.get("item")
+    kv.set("item", cur + x)
+    return x[:1]
+
+
+def run_parallel_sweep(window_ms: float = PARALLEL_WINDOW_MS,
+                       workers=tuple(PARALLEL_WORKERS),
+                       n_requests: int = PARALLEL_REQUESTS,
+                       rate_per_ms: float = 2.0):
+    """Serial vs parallel dispatch pipeline on a 2-STORE-NODE topology,
+    measured in ONE process so every row shares the same host load (this
+    host's run-to-run noise swamps cross-process comparisons):
+
+    * ``kind=pump`` — a fixed-rate arrival stream round-robin over both
+      store nodes, drained cycle-by-cycle, engine ``workers`` 1 vs N.
+      For the read op the rows also record ``matches_serial``: the
+      parallel pump must return the IDENTICAL ticket→result map as the
+      serial one (the determinism contract).
+    * ``kind=serve`` — the wall-clock serving loop, closed loop with 8
+      client threads split between a read function served at ``edge`` and
+      a write function served at ``edge2`` (two store nodes per flush
+      cycle), ``FaasServer(workers=...)`` 1 vs N.  The acceptance check
+      is the parallel row sustaining >= the serial row's ops/s.
+    """
+    import threading as _threading
+    from repro.core import percentiles
+    from repro.core.engine import BatchedInvocationEngine
+    from repro.launch.faas_server import FaasServer
+    cluster = Cluster({"edge": "edge", "edge2": "edge", "cloud": "cloud"},
+                      net=paper_topology(), measure_compute=False)
+    nodes = ["edge", "edge2"]
+    # read served at edge, write at edge2: every flush cycle spans two
+    # store nodes (the replicated keygroup lives at both)
+    cluster.deploy(get_function("fig4_par_read"), ["edge", "edge2"])
+    cluster.deploy(get_function("fig4_par_write"), ["edge2"])
+    x = np.ones((PAR_ITEM_WIDTH,), np.float32)
+    for fn_name, nd in (("fig4_par_read", "edge"),
+                        ("fig4_par_read", "edge2"),
+                        ("fig4_par_write", "edge2")):
+        for b in (1, 8, 64, 256):       # warm the buckets the sweep hits
+            cluster.invoke_batch(fn_name, nd, [x] * b)
+    for i in range(4):                  # warm the merge jit shapes too
+        cluster.invoke("fig4_par_write", "edge2", x, t_send=float(i))
+    cluster.flush_replication()
+
+    def block():
+        for nd in nodes:
+            jax.block_until_ready(cluster.nodes[nd].stores["fig4parkg"])
+
+    rows = []
+    spacing = 1.0 / (rate_per_ms * len(nodes))   # global inter-arrival (ms)
+    stream = [("fig4_par_read", "edge") if i % 2 == 0
+              else ("fig4_par_write", "edge2") for i in range(n_requests)]
+    # interleave the serial/parallel repeats so drifting host load hits
+    # both equally; report the median of each
+    samples = {k: [] for k in workers}
+    for _ in range(3):
+        for k in workers:
+            cluster.flush_replication()
+            block()
+            eng = BatchedInvocationEngine(cluster, window_ms=window_ms,
+                                          workers=k)
+            cluster.engine = eng
+            t0 = time.perf_counter()
+            for i, (fn_name, nd) in enumerate(stream):
+                eng.submit(fn_name, nd, x, t_send=i * spacing)
+            out = eng.pump()    # ONE cycle: both store nodes' windows
+            block()
+            elapsed = time.perf_counter() - t0
+            eng.close()
+            assert len(out) == n_requests
+            samples[k].append(n_requests / elapsed)
+    for k in workers:
+        rows.append({"kind": "pump", "op": "read+write", "workers": k,
+                     "window_ms": window_ms,
+                     "ops_per_s": round(float(np.median(samples[k])), 1),
+                     "runs": [round(s, 1) for s in samples[k]]})
+
+    # determinism check on a read-only stream spanning BOTH store nodes
+    # (so the workers>1 run actually exercises the pool — a single store
+    # key would fall back to the inline path and prove nothing); reads
+    # leave no state behind, so both runs see identical stores
+    ref_map = None
+    for k in workers:
+        cluster.flush_replication()
+        block()
+        eng = BatchedInvocationEngine(cluster, window_ms=window_ms,
+                                      workers=k)
+        cluster.engine = eng
+        for i in range(n_requests):
+            eng.submit("fig4_par_read", nodes[i % 2], x,
+                       t_send=i * spacing,
+                       client=("client", "client2")[i % 2])
+        out = eng.pump()
+        eng.close()
+        m = {t: (np.asarray(r.output).tobytes(), r.t_received,
+                 r.t_applied, r.node) for t, r in out.items()}
+        if ref_map is None:
+            ref_map = m
+        else:
+            rows.append({"kind": "pump", "op": "read", "workers": k,
+                         "window_ms": window_ms,
+                         "matches_serial": bool(m == ref_map)})
+
+    # the wall-clock serving loop under the same host load: 32 closed-loop
+    # clients, half reading (served at edge), half writing (at edge2) —
+    # interleaved repeats and medians, like the pump rows
+    serve_clients = 32
+    serve_n = min(n_requests, 256)
+    serve_samples = {k: [] for k in workers}
+    serve_p99 = {k: [] for k in workers}
+    for _ in range(3):
+        for k in workers:
+            cluster.engine = BatchedInvocationEngine(cluster)
+            errors = []
+
+            def client(cid, srv):
+                fn = ("fig4_par_read", "fig4_par_write")[cid % 2]
+                try:
+                    for _ in range(serve_n // serve_clients):
+                        srv.submit(fn, x).result(timeout=60.0)
+                except BaseException as e:
+                    errors.append(e)
+
+            t0 = time.perf_counter()
+            with FaasServer(cluster, window_ms=8.0, time_scale=50.0,
+                            workers=k) as srv:
+                threads = [_threading.Thread(target=client,
+                                             args=(cid, srv))
+                           for cid in range(serve_clients)]
+                for t in threads:
+                    t.start()
+                for t in threads:
+                    t.join()
+            elapsed = time.perf_counter() - t0
+            assert not errors, errors[0]
+            serve_samples[k].append(srv.stats.served / elapsed)
+            serve_p99[k].append(percentiles(srv.response_ms)[99])
+            cluster.engine.close()
+    for k in workers:
+        rows.append({"kind": "serve", "op": "read+write", "workers": k,
+                     "window_ms": 8.0,
+                     "ops_per_s": round(float(np.median(serve_samples[k])),
+                                        1),
+                     "runs": [round(s, 1) for s in serve_samples[k]],
+                     "p99_ms": round(float(np.median(serve_p99[k])), 2)})
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # Serving sweep: the wall-clock server, open- and closed-loop arrivals
 # ---------------------------------------------------------------------------
 
@@ -406,7 +578,8 @@ def run():
             "batch_sweep": run_batch_sweep(),
             "window_sweep": run_window_sweep(),
             "hedge_sweep": run_hedge_sweep(),
-            "serving_sweep": run_serving_sweep()}
+            "serving_sweep": run_serving_sweep(),
+            "parallel_sweep": run_parallel_sweep()}
 
 
 def main(json_out: str = None):
@@ -440,6 +613,20 @@ def main(json_out: str = None):
               f"hedges won)")
     print_table(results["serving_sweep"],
                 "Fig 4e — wall-clock serving loop (open/closed arrivals)")
+    print_table(results["parallel_sweep"],
+                "Fig 4f — serial vs parallel dispatch pipeline")
+    serve_rows = {r["workers"]: r for r in results["parallel_sweep"]
+                  if r["kind"] == "serve"}
+    if len(serve_rows) > 1:
+        lo, hi = min(serve_rows), max(serve_rows)
+        ratio = serve_rows[hi]["ops_per_s"] / serve_rows[lo]["ops_per_s"]
+        print(f"serving loop: workers={hi} vs workers={lo} = {ratio:.2f}x "
+              f"{'(sustained)' if ratio >= 1.0 else ''}")
+    det = [r.get("matches_serial") for r in results["parallel_sweep"]
+           if "matches_serial" in r]
+    if det:
+        print(f"parallel pump determinism vs serial: "
+              f"{'OK' if all(det) else 'MISMATCH'}")
     for op in ("read", "write"):
         by_batch = {r["batch"]: r for r in results["batch_sweep"]
                     if r["op"] == op}

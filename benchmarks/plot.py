@@ -1,0 +1,201 @@
+"""Plot the fig-4 benchmark JSON into the paper-reproduction figures.
+
+Consumes the JSON written by ``python -m benchmarks.fig4_throughput
+--json-out fig4.json`` (or the ``fig4`` section of ``benchmarks.run
+--json-out``) and renders:
+
+* **fig4b_batch.png**   — batched-engine ops/s vs explicit batch size
+  (``batch_sweep``), read and write series;
+* **fig4c_window.png**  — background-flusher ops/s over the window_ms
+  grid (``window_sweep``), one panel per op, one series per node count;
+* **fig4d_hedge.png**   — straggler-topology latency percentiles,
+  unhedged vs hedged (``hedge_sweep``);
+* **fig4f_parallel.png** — serial vs parallel pump ops/s
+  (``parallel_sweep``), when that sweep is present.
+
+matplotlib is an OPTIONAL dependency: without it the script says what it
+would have plotted and exits 0 — benchmark JSON is the source of truth and
+stays usable headless (the tables the benchmarks print are the same data).
+
+    PYTHONPATH=src python -m benchmarks.fig4_throughput --json-out fig4.json
+    PYTHONPATH=src python -m benchmarks.plot fig4.json --out-dir artifacts/plots
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# fixed categorical order (validated palette: see docs) — color follows the
+# entity (read/write, node count, hedged-ness), never its position in a run
+C1, C2, C3 = "#2a78d6", "#eb6834", "#1baf7a"     # blue / orange / aqua
+INK, INK2, GRID = "#0b0b0b", "#52514e", "#e4e3df"
+SURFACE = "#fcfcfb"
+
+
+def _load_matplotlib():
+    try:
+        import matplotlib
+        matplotlib.use("Agg")               # headless benchmark hosts
+        import matplotlib.pyplot as plt
+        return plt
+    except ImportError:
+        return None
+
+
+def _style(ax, title, xlabel, ylabel):
+    ax.set_facecolor(SURFACE)
+    ax.set_title(title, color=INK, fontsize=11, loc="left")
+    ax.set_xlabel(xlabel, color=INK2, fontsize=9)
+    ax.set_ylabel(ylabel, color=INK2, fontsize=9)
+    ax.grid(True, color=GRID, linewidth=0.6)
+    ax.set_axisbelow(True)
+    for side in ("top", "right"):
+        ax.spines[side].set_visible(False)
+    for side in ("left", "bottom"):
+        ax.spines[side].set_color(GRID)
+    ax.tick_params(colors=INK2, labelsize=8)
+
+
+def plot_batch_sweep(plt, rows, path):
+    fig, ax = plt.subplots(figsize=(5.2, 3.4), dpi=150)
+    fig.patch.set_facecolor(SURFACE)
+    for op, color in (("read", C1), ("write", C2)):
+        pts = sorted((r["batch"], r["ops_per_s"])
+                     for r in rows if r["op"] == op)
+        if not pts:
+            continue
+        ax.plot([p[0] for p in pts], [p[1] for p in pts], color=color,
+                linewidth=2, marker="o", markersize=5, label=op)
+    ax.set_xscale("log", base=2)
+    ax.set_yscale("log")
+    _style(ax, "Fig 4b — batched invocation engine throughput",
+           "batch size (requests per dispatch)", "ops/s (wall clock)")
+    ax.legend(frameon=False, fontsize=8, labelcolor=INK)
+    fig.tight_layout()
+    fig.savefig(path, facecolor=SURFACE)
+    plt.close(fig)
+
+
+def plot_window_sweep(plt, rows, path):
+    ops = [op for op in ("read", "write")
+           if any(r["op"] == op for r in rows)]
+    fig, axes = plt.subplots(1, max(1, len(ops)), figsize=(8.2, 3.4),
+                             dpi=150, sharey=True, squeeze=False)
+    fig.patch.set_facecolor(SURFACE)
+    node_counts = sorted({r["nodes"] for r in rows})
+    colors = {n: c for n, c in zip(node_counts, (C1, C2, C3))}
+    for ax, op in zip(axes[0], ops):
+        for n in node_counts:
+            pts = sorted((r["window_ms"], r["ops_per_s"]) for r in rows
+                         if r["op"] == op and r["nodes"] == n)
+            if not pts:
+                continue
+            ax.plot([p[0] for p in pts], [p[1] for p in pts],
+                    color=colors[n], linewidth=2, marker="o", markersize=5,
+                    label=f"{n} node{'s' if n > 1 else ''}")
+        ax.set_xscale("log", base=2)
+        _style(ax, f"Fig 4c — background flusher ({op})",
+               "window (ms, virtual)", "ops/s (wall clock)" if op == ops[0]
+               else "")
+        ax.legend(frameon=False, fontsize=8, labelcolor=INK)
+    fig.tight_layout()
+    fig.savefig(path, facecolor=SURFACE)
+    plt.close(fig)
+
+
+def plot_hedge_sweep(plt, rows, path):
+    fig, ax = plt.subplots(figsize=(5.2, 3.4), dpi=150)
+    fig.patch.set_facecolor(SURFACE)
+    pcts = ["p50_ms", "p90_ms", "p99_ms"]
+    xs = range(len(pcts))
+    width = 0.38
+    for off, (hedged, color, label) in enumerate(
+            ((False, C1, "unhedged"), (True, C2, "hedged"))):
+        row = next((r for r in rows if r["hedged"] == hedged), None)
+        if row is None:
+            continue
+        vals = [row[p] for p in pcts]
+        bars = ax.bar([x + (off - 0.5) * (width + 0.04) for x in xs], vals,
+                      width=width, color=color, label=label, zorder=2)
+        for b, v in zip(bars, vals):        # direct labels: few bars
+            ax.text(b.get_x() + b.get_width() / 2, v, f"{v:.0f}",
+                    ha="center", va="bottom", fontsize=7, color=INK2)
+    ax.set_xticks(list(xs), [p.replace("_ms", "") for p in pcts])
+    _style(ax, "Fig 4d — windowed hedge on the straggler topology",
+           "latency percentile", "latency (ms, virtual)")
+    ax.legend(frameon=False, fontsize=8, labelcolor=INK)
+    fig.tight_layout()
+    fig.savefig(path, facecolor=SURFACE)
+    plt.close(fig)
+
+
+def plot_parallel_sweep(plt, rows, path):
+    rows = [r for r in rows if "ops_per_s" in r]    # determinism-check
+    fig, ax = plt.subplots(figsize=(5.6, 3.4), dpi=150)   # rows carry none
+    fig.patch.set_facecolor(SURFACE)
+    cases = sorted({(r["kind"], r["op"]) for r in rows})
+    workers = sorted({r["workers"] for r in rows})
+    width = 0.8 / max(1, len(workers))
+    colors = {w: c for w, c in zip(workers, (C1, C2, C3))}
+    for wi, w in enumerate(workers):
+        vals = []
+        for kind, op in cases:
+            row = next((r for r in rows if r["kind"] == kind
+                        and r["op"] == op and r["workers"] == w), None)
+            vals.append(row["ops_per_s"] if row else 0.0)
+        ax.bar([i + (wi - (len(workers) - 1) / 2) * (width + 0.02)
+                for i in range(len(cases))], vals, width=width,
+               color=colors[w], label=f"workers={w}", zorder=2)
+    ax.set_xticks(range(len(cases)),
+                  [f"{kind}\n{op}" for kind, op in cases])
+    _style(ax, "Fig 4f — serial vs parallel dispatch pipeline",
+           "workload", "ops/s (wall clock)")
+    ax.legend(frameon=False, fontsize=8, labelcolor=INK)
+    fig.tight_layout()
+    fig.savefig(path, facecolor=SURFACE)
+    plt.close(fig)
+
+
+PLOTS = (
+    ("batch_sweep", plot_batch_sweep, "fig4b_batch.png"),
+    ("window_sweep", plot_window_sweep, "fig4c_window.png"),
+    ("hedge_sweep", plot_hedge_sweep, "fig4d_hedge.png"),
+    ("parallel_sweep", plot_parallel_sweep, "fig4f_parallel.png"),
+)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="benchmarks.plot", description=__doc__)
+    ap.add_argument("json_in", help="fig4 benchmark JSON (or a run.py "
+                    "--json-out file with a fig4 section)")
+    ap.add_argument("--out-dir", default="artifacts/plots")
+    args = ap.parse_args(argv)
+
+    with open(args.json_in) as f:
+        data = json.load(f)
+    if "fig4" in data:                      # a benchmarks.run JSON
+        data = data["fig4"]
+
+    plt = _load_matplotlib()
+    available = [(k, fn, name) for k, fn, name in PLOTS if data.get(k)]
+    if not available:
+        print("no plottable sweeps in the JSON (expected one of: "
+              + ", ".join(k for k, _, _ in PLOTS) + ")")
+        return 1
+    if plt is None:
+        print("matplotlib not installed — would have plotted: "
+              + ", ".join(name for _, _, name in available)
+              + " (the benchmark JSON/tables carry the same data)")
+        return 0
+    os.makedirs(args.out_dir, exist_ok=True)
+    for key, fn, name in available:
+        path = os.path.join(args.out_dir, name)
+        fn(plt, data[key], path)
+        print(f"wrote {path} ({len(data[key])} rows from {key})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

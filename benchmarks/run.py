@@ -37,6 +37,9 @@ def main_serve(argv):
                     help="extra compute at the nearest replica (hedge demo)")
     ap.add_argument("--time-scale", type=float, default=50.0,
                     help="virtual ms per wall ms")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="parallel-pump width: per-store-node executors "
+                         "(default: serial pump)")
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args(argv)
 
@@ -58,7 +61,8 @@ def main_serve(argv):
     with FaasServer(cluster, window_ms=args.window_ms,
                     max_batch=args.max_batch,
                     hedge_after_ms=args.hedge_after_ms,
-                    time_scale=args.time_scale) as srv:
+                    time_scale=args.time_scale,
+                    workers=args.workers) as srv:
         if args.mode == "closed":
             serve_closed_loop(srv, "fig4_read", lambda i: x,
                               n_requests=args.requests,
@@ -73,6 +77,7 @@ def main_serve(argv):
         rstats = srv.router.stats
         result = {"mode": args.mode, "requests": srv.stats.served,
                   "lost": srv.stats.lost,
+                  "workers": args.workers,
                   "window_ms": args.window_ms,
                   "hedge_after_ms": args.hedge_after_ms,
                   "straggler_ms": args.straggler_ms,

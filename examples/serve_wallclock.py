@@ -11,10 +11,16 @@ Here `FaasServer` maps REAL arrival times onto the virtual timeline:
   3. a STRAGGLER topology (the nearest replica serves slowly) shows the
      windowed hedge: read-only requests whose window outlives the hedge
      deadline are duplicated at the second replica, and the earlier
-     completion wins.
+     completion wins (the duplicate goes to the lowest-latency-EWMA
+     replica once samples exist);
+  4. the CONCURRENT dispatch pipeline: `workers=2` runs the two store
+     nodes' groups of each flush cycle on per-node executors, and an
+     asyncio closed loop hosts 16 LOGICAL clients on one event loop —
+     no thread per client.
 
 Run:  PYTHONPATH=src python examples/serve_wallclock.py
 """
+import asyncio
 import time
 
 import jax.numpy as jnp
@@ -22,7 +28,8 @@ import numpy as np
 
 from repro.core import Cluster, enoki_function, get_function, percentiles
 from repro.core.network import paper_topology
-from repro.launch.faas_server import FaasServer, serve_closed_loop
+from repro.launch.faas_server import (FaasServer, serve_closed_loop,
+                                      serve_closed_loop_async)
 
 
 @enoki_function(name="wc_acc", keygroups=["wc_kg"], codec_width=16)
@@ -90,6 +97,19 @@ def main():
                  f"{srv.router.stats.hedge_wins}" if hedged else "")
         print(f"straggler {'with' if hedged else 'no  '} hedge: "
               f"p50/p99 = {pct[50]:.1f}/{pct[99]:.1f} ms{extra}")
+
+    # -- 4. parallel pump + asyncio clients: one process, many logical
+    #       clients, per-store-node executors -------------------------------
+    cluster, x = fresh_cluster()
+    t0 = time.perf_counter()
+    with FaasServer(cluster, window_ms=4.0, time_scale=100.0,
+                    workers=2) as srv:
+        rs = asyncio.run(serve_closed_loop_async(
+            srv, "wc_acc", lambda i: x, n_requests=128, concurrency=16))
+    wall = time.perf_counter() - t0
+    print(f"asyncio closed loop (16 logical clients, workers=2): "
+          f"{len(rs)} requests, {len(rs)/wall:.0f} ops/s wall, "
+          f"{srv.stats.pumps} pumps")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,52 @@
+#!/usr/bin/env bash
+# Builder verification for the Enoki reproduction.
+#
+#   scripts/verify.sh --fast   tier0 subset (<60 s) + 2-node server smoke
+#   scripts/verify.sh          full tier-1 suite (~8 min) + server smoke
+#
+# tier0 is the pre-commit signal: the fast, low-jit tests covering the
+# store, CRDTs, sharding rules, the window flusher, router sessions and
+# the concurrent dispatch pipeline.  The full suite is still the gate.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [ "${1:-}" = "--fast" ]; then
+    python -m pytest -q -m tier0
+else
+    python -m pytest -x -q
+fi
+
+# 2-node FaasServer smoke: the wall-clock serving loop end to end with the
+# parallel pump — threads + asyncio clients against two store nodes.
+python - <<'EOF'
+import asyncio
+import numpy as np
+from repro.core import Cluster, enoki_function, get_function
+from repro.launch.faas_server import FaasServer, serve_closed_loop_async
+
+@enoki_function(name="vy_acc", keygroups=["vykg"], codec_width=8)
+def vy_acc(kv, x):
+    cur, found = kv.get("total")
+    kv.set("total", cur + x)
+    return cur[:1] + x[:1]
+
+c = Cluster({"edge": "edge", "edge2": "edge", "cloud": "cloud"},
+            measure_compute=False)
+c.deploy(get_function("vy_acc"), ["edge", "edge2"])
+x = np.ones(8, np.float32)
+for b in (1, 8, 64):
+    c.invoke_batch("vy_acc", "edge", [x] * b)       # warm jit buckets
+c.flush_replication()
+
+with FaasServer(c, window_ms=5.0, time_scale=200.0, workers=2) as srv:
+    futs = [srv.submit("vy_acc", x, session_id="smoke") for _ in range(16)]
+    outs = [f.result(timeout=30.0) for f in futs]
+    more = asyncio.run(serve_closed_loop_async(
+        srv, "vy_acc", lambda i: x, n_requests=16, concurrency=4))
+assert len(outs) == len(more) == 16
+assert srv.stats.served == 32 and srv.stats.lost == 0
+print(f"server smoke OK: {srv.stats.served} served "
+      f"({srv.stats.pumps} pumps, workers=2, thread + asyncio clients)")
+EOF
+echo "verify OK"

@@ -26,7 +26,7 @@ from repro.core.router import Router
 from repro.core.staleness import WriteLog, percentiles
 from repro.core.store import (Store, kv_delete, kv_get, kv_scan, kv_set,
                               kv_set_fold, merge_stores, store_new,
-                              store_select)
+                              store_select, stores_equal)
 from repro.core.versioning import fnv1a
 
 __all__ = [
@@ -39,5 +39,6 @@ __all__ = [
     "NetworkModel", "paper_topology", "anti_entropy_round", "converge",
     "make_pod_replicate_step", "replicate_pod_axis", "Router", "WriteLog",
     "percentiles", "Store", "kv_delete", "kv_get", "kv_scan", "kv_set",
-    "kv_set_fold", "merge_stores", "store_new", "store_select", "fnv1a",
+    "kv_set_fold", "merge_stores", "store_new", "store_select",
+    "stores_equal", "fnv1a",
 ]

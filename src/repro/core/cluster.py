@@ -16,12 +16,21 @@ Placements (ReplicationPolicy):
   REPLICATED     kv ops hit the node-local replica; async replication to peers
   PEER_FETCH     kv ops hit the owner node's store; remote nodes pay one RTT/op
   CLOUD_CENTRAL  kv ops hit the cloud node's store; everyone else pays RTT/op
+
+Concurrency: every node carries its own lock (guarding that node's store/
+clock rebinds) and its own replication delivery queue with a queue lock, so
+the engine's parallel pump can execute independent store nodes' groups
+concurrently — ``_deliver_until``/``_schedule_replication`` never touch
+global state.  Lock order within the cluster: a node's lock may be taken
+before that same node's queue lock; queue locks of PEERS are only ever
+taken with no node lock held (``_schedule_replication`` runs outside them).
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
 import itertools
+import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -36,7 +45,7 @@ from repro.core.faas import (FunctionSpec, VectorCodec,
 from repro.core.keygroup import KeygroupSpec, arena_new
 from repro.core.naming import NamingService
 from repro.core.network import NetworkModel, paper_topology
-from repro.core.store import Store, merge_stores
+from repro.core.store import Store, merge_stores, merge_stores_jit
 from repro.core.versioning import MAX_NODES
 
 
@@ -71,10 +80,27 @@ class _Node:
     batched_handlers: Dict[str, Callable] = dataclasses.field(
         default_factory=dict)
     compute_ms: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # guards store/clock rebinds of THIS node (a Store itself is an
+    # immutable NamedTuple — mutation is rebinding the dict entry, and the
+    # read-dispatch-write of one invocation holds the lock across all
+    # three so concurrent touches of one store node serialize)
+    lock: threading.RLock = dataclasses.field(
+        default_factory=threading.RLock, repr=False, compare=False)
 
     def __post_init__(self):
         if self.clock is None:
             self.clock = jnp.zeros((), jnp.int32)
+
+
+@dataclasses.dataclass
+class _DeliveryQueue:
+    """One node's pending replication deliveries: a heap of
+    ``(arrival_t, seq, kg, snapshot)`` behind its own lock, so peers
+    schedule into it and the target drains it without any global state."""
+    heap: List[Tuple[float, int, str, Store]] = dataclasses.field(
+        default_factory=list)
+    lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
 
 
 class Cluster:
@@ -86,9 +112,11 @@ class Cluster:
         for i, (name, kind) in enumerate(nodes.items()):
             self.nodes[name] = _Node(name=name, kind=kind, node_id=i)
             self.naming.register_node(name, kind)
-        # pending replication deliveries: (arrival_t, seq, kg, target, snapshot)
-        self._events: List[Tuple[float, int, str, str, Store]] = []
+        # per-node pending replication deliveries (each behind its own lock)
+        self._queues: Dict[str, _DeliveryQueue] = {
+            name: _DeliveryQueue() for name in self.nodes}
         self._seq = itertools.count()
+        self._repl_lock = threading.Lock()   # replication_bytes accounting
         self._measure = measure_compute
         self.replication_bytes = 0   # accounting for §Perf
         self.specs: Dict[str, FunctionSpec] = {}
@@ -187,37 +215,56 @@ class Cluster:
         """Apply all replication deliveries for ``node`` with arrival <= t,
         in (arrival, seq) order — network delivery order, so a later snapshot
         is always merged after an earlier one regardless of how the pending
-        heap happens to be laid out."""
-        due, keep = [], []
-        for ev in self._events:
-            arrival, _, kg, target, snapshot = ev
-            if target == node and arrival <= t:
-                due.append(ev)
-            else:
-                keep.append(ev)
-        if not due:
-            return
+        heap happens to be laid out.  Thread-safe: only ``node``'s own lock
+        and queue lock are taken, so deliveries to different nodes run
+        concurrently under the parallel pump."""
         nd = self.nodes[node]
-        for arrival, _, kg, target, snapshot in sorted(due, key=lambda e: e[:2]):
-            nd.stores[kg] = merge_stores(nd.stores[kg], snapshot)
-        # the filtered keep-list is no longer a valid heap for later heappush
-        heapq.heapify(keep)
-        self._events = keep
+        q = self._queues[node]
+        with nd.lock:
+            with q.lock:
+                due = [ev for ev in q.heap if ev[0] <= t]
+                if not due:
+                    return
+                keep = [ev for ev in q.heap if ev[0] > t]
+                # the filtered keep-list is no longer a valid heap for
+                # later heappush
+                heapq.heapify(keep)
+                q.heap = keep
+            for arrival, _, kg, snapshot in sorted(due, key=lambda e: e[:2]):
+                nd.stores[kg] = merge_stores_jit(nd.stores[kg], snapshot)
 
     def _schedule_replication(self, kg: str, source: str, t_apply: float) -> None:
         spec = self.policies[kg]
         if spec.policy != ReplicationPolicy.REPLICATED:
             return
-        snapshot = self.nodes[source].stores[kg]
+        with self.nodes[source].lock:
+            snapshot = self.nodes[source].stores[kg]
         nbytes = sum(int(np.prod(x.shape)) * x.dtype.itemsize
                      for x in snapshot[:4])
         for peer in self.naming.replicas_of(kg):
             if peer == source:
                 continue
             arrival = t_apply + self.net.one_way_ms(source, peer)
-            heapq.heappush(self._events,
-                           (arrival, next(self._seq), kg, peer, snapshot))
-            self.replication_bytes += nbytes
+            q = self._queues[peer]
+            with q.lock:
+                heapq.heappush(q.heap,
+                               (arrival, next(self._seq), kg, snapshot))
+            with self._repl_lock:
+                self.replication_bytes += nbytes
+
+    def pending_replication(self, node: Optional[str] = None
+                            ) -> List[Tuple[float, str, str]]:
+        """Read-only view of undelivered replication events as
+        ``(arrival_t, keygroup, target_node)`` tuples, sorted by arrival —
+        the public replacement for poking the (now per-node) delivery
+        queues directly."""
+        out = []
+        for name, q in self._queues.items():
+            if node is not None and name != node:
+                continue
+            with q.lock:
+                out.extend((ev[0], ev[2], name) for ev in q.heap)
+        return sorted(out)
 
     # ----------------------------------------------------------------- invoke
     def _resolve_placement(self, spec: FunctionSpec, node: str
@@ -262,13 +309,15 @@ class Cluster:
         if kg is not None:
             self._deliver_until(store_node, t_arrive)
 
-        # execute the real handler against the placed store
+        # execute the real handler against the placed store (the node lock
+        # makes the read-dispatch-write atomic against the parallel pump)
         if kg is not None:
             snd = self.nodes[store_node]
-            store = snd.stores[kg]
-            new_store, new_clock, y, ops = handler(store, snd.clock, x)
-            snd.stores[kg] = new_store
-            snd.clock = new_clock
+            with snd.lock:
+                store = snd.stores[kg]
+                new_store, new_clock, y, ops = handler(store, snd.clock, x)
+                snd.stores[kg] = new_store
+                snd.clock = new_clock
         else:
             _, _, y, ops = handler(
                 arena_new(KeygroupSpec(name="_tmp",

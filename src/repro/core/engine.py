@@ -63,15 +63,33 @@ windows for ``pump``) is validated BEFORE anything dispatches — an
 undeployed function/node raises KeyError with every window left intact.  If
 a dispatch itself raises mid-cycle, the FAILING group is dropped, not
 requeued — its store effects may already have committed; windows that never
-started dispatching go back on the queue, and results of groups that
-completed cleanly are retained and returned by the NEXT ``flush``/``pump``.
+started dispatching go back on the queue (serial pump; under the parallel
+pump every group of the cycle has already started, so clean groups complete
+and failing ones drop), and results of groups that completed cleanly are
+retained and returned by the NEXT ``flush``/``pump``.
 ``discard(ticket)``/``pending()`` are the public queue-surgery API for
 recovering from a poisoned request (see docs/batched_engine.md).
+
+Concurrency (the staged dispatch pipeline): a flush cycle is three stages —
+(1) a SERIAL window-collection/validation stage under the queue lock,
+(2) a PARALLEL execution stage where the cycle's independent ``(fn, node)``
+groups run on a per-store-node executor pool (``use_workers(n)``; one
+single-worker executor per store node so same-store work keeps its fold
+order — the determinism contract: ``workers=4`` produces the identical
+ticket→result map as ``workers=1``), and (3) a SERIAL merge stage folding
+coalesced replication snapshots and assembling results.  Two engine locks
+keep ``submit`` (the client hot path) off the dispatch path: ``_qlock``
+guards the window queue/tickets/ready-results and is only ever held for
+host-side bookkeeping; ``_cycle_lock`` serializes whole flush cycles (JAX
+dispatches run under it, never under ``_qlock``).  See the "Concurrency
+contract" section of docs/batched_engine.md for the full lock hierarchy.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import threading
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -80,6 +98,14 @@ import numpy as np
 
 DEFAULT_BUCKETS = (1, 8, 64, 256)
 MAX_CALL_DEPTH = 32     # downstream-chain guard (cycles in calls/async_calls)
+MIN_PARALLEL_REQUESTS = 64      # cycles smaller than this run inline even
+                                # with workers set: executor handoff adds
+                                # latency a small latency-sensitive cycle
+                                # (a serving loop's) cannot amortize —
+                                # measured on the reference host, cycles
+                                # of ~32 requests lose to inline; the
+                                # win shows from ~hundreds of requests
+                                # per cycle across >=2 store nodes
 
 
 @dataclasses.dataclass(eq=False)        # identity semantics: ps hold arrays
@@ -104,10 +130,17 @@ class _Window:
 
 @dataclasses.dataclass
 class _Cycle:
-    """Per-flush-cycle shared state (parallel-timeline bookkeeping)."""
+    """Per-flush-cycle shared state (parallel-timeline bookkeeping).
+
+    ``hwm`` is written only by the serial collect stage and read by the
+    (possibly parallel) exec stage; ``repl`` is written by concurrent group
+    executions, so its updates go through ``lock`` — the merged value is a
+    max, so the outcome is order-independent."""
     hwm: Dict[str, float] = dataclasses.field(default_factory=dict)
     # (kg, store_node) -> latest apply time of a write this cycle
     repl: Dict[Tuple[str, str], float] = dataclasses.field(default_factory=dict)
+    lock: threading.Lock = dataclasses.field(default_factory=threading.Lock,
+                                             repr=False)
 
 
 @dataclasses.dataclass
@@ -141,7 +174,25 @@ class _Frame:
 
 
 @dataclasses.dataclass
-class EngineStats:
+class AtomicStats:
+    """Base for stats dataclasses whose counters are bumped from multiple
+    threads (parallel pump workers, client submit threads, the serving
+    loop).  ``inc`` is the one mutation path — a plain ``+=`` is a
+    read-modify-write race under the executor pump and silently loses
+    counts.  The lock is a leaf in the lock hierarchy: nothing else is
+    ever acquired while holding it."""
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
+
+    def inc(self, name: str, n: int = 1) -> int:
+        with self._lock:
+            v = getattr(self, name) + n
+            setattr(self, name, v)
+            return v
+
+
+@dataclasses.dataclass
+class EngineStats(AtomicStats):
     submitted: int = 0
     cycles: int = 0
     windows_flushed: int = 0
@@ -155,16 +206,54 @@ class EngineStats:
                                     # coalescing
 
 
+class _NodePool:
+    """The parallel pump's executor pool: ONE single-worker executor per
+    store node, shared across cycles.  Same-store-node groups land on the
+    same worker in submission order, so every per-store fold keeps the
+    exact order the serial pump would use — which is what makes the
+    parallel pump's ticket→result map identical to the serial one.  At
+    most ``workers`` distinct executors exist; store nodes beyond that
+    share them round-robin by first touch (deterministic given the
+    engine's deterministic submission order)."""
+
+    def __init__(self, workers: int):
+        self.workers = max(1, int(workers))
+        self._execs: List[ThreadPoolExecutor] = []
+        self._slot: Dict[str, int] = {}
+        self._lock = threading.Lock()
+
+    def submit(self, node: str, fn, *args):
+        with self._lock:
+            i = self._slot.get(node)
+            if i is None:
+                i = self._slot[node] = len(self._slot) % self.workers
+            if i >= len(self._execs):
+                self._execs.append(ThreadPoolExecutor(
+                    max_workers=1,
+                    thread_name_prefix=f"engine-pump-{i}"))
+            ex = self._execs[i]
+        return ex.submit(fn, *args)
+
+    def shutdown(self) -> None:
+        with self._lock:
+            execs, self._execs = self._execs, []
+            self._slot.clear()
+        for ex in execs:
+            ex.shutdown(wait=True)
+
+
 class BatchedInvocationEngine:
     def __init__(self, cluster, bucket_sizes: Sequence[int] = DEFAULT_BUCKETS,
                  window_ms: Optional[float] = None,
                  max_batch: Optional[int] = None,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 workers: Optional[int] = None):
         self.cluster = cluster
         self.buckets = tuple(sorted(set(int(b) for b in bucket_sizes)))
         self.window_ms = window_ms
         self.max_batch = max_batch
         self.clock = clock
+        self.workers = workers
         self.stats = EngineStats()
         self._windows: List[_Window] = []
         self._tickets = 0
@@ -175,6 +264,17 @@ class BatchedInvocationEngine:
         # (client, node, payload) triple is a constant: cache it (submit is
         # the per-request hot path of the background flusher)
         self._hops: Dict[Tuple[str, str, int], float] = {}
+        # lock hierarchy (outer to inner): _cycle_lock > _qlock > cluster
+        # node/queue locks > stats locks.  _qlock guards the queue state
+        # (_windows/_tickets/_ready) and is never held across a dispatch;
+        # _cycle_lock serializes flush cycles (all device dispatches)
+        self._qlock = threading.RLock()
+        self._cycle_lock = threading.RLock()
+        self._pool: Optional[_NodePool] = None
+        # cycles below this many requests run inline even with workers
+        # set (handoff latency vs throughput trade); tests override it to
+        # force the pool path on small streams
+        self.min_parallel_requests = MIN_PARALLEL_REQUESTS
 
     def _hop_ms(self, client: str, node: str, payload_bytes: int) -> float:
         key = (client, node, payload_bytes)
@@ -199,6 +299,48 @@ class BatchedInvocationEngine:
         self.max_batch = max_batch
         return self
 
+    # ---------------------------------------------------------------- workers
+    def use_workers(self, workers: Optional[int]) -> "BatchedInvocationEngine":
+        """Set the parallel-pump width (chainable).  ``workers`` caps the
+        number of per-store-node executors a flush cycle's exec stage may
+        use; ``None``/``1`` keeps the serial in-line pump.  Changing the
+        width never changes results (the determinism contract) — only how
+        many independent store nodes dispatch concurrently."""
+        if workers is not None and workers < 1:
+            raise ValueError("workers must be >= 1")
+        # _cycle_lock first: a flush cycle mid-dispatch on another thread
+        # must never have its pool shut down under it
+        with self._cycle_lock:
+            stale = None
+            with self._qlock:
+                if (self._pool is not None
+                        and (workers or 1) != self._pool.workers):
+                    stale, self._pool = self._pool, None
+                self.workers = workers
+            if stale is not None:
+                stale.shutdown()
+        return self
+
+    def _get_pool(self) -> Optional[_NodePool]:
+        """The shared executor pool, or None for the serial pump."""
+        if self.workers is None or self.workers <= 1:
+            return None
+        with self._qlock:
+            if self._pool is None:
+                self._pool = _NodePool(self.workers)
+            return self._pool
+
+    def close(self) -> None:
+        """Release the executor pool's threads (idempotent).  Queued
+        windows and ready results survive — only the workers go away; the
+        next parallel cycle would lazily rebuild them.  Waits for any
+        cycle in flight (cycle lock) rather than yanking its pool."""
+        with self._cycle_lock:
+            with self._qlock:
+                pool, self._pool = self._pool, None
+            if pool is not None:
+                pool.shutdown()
+
     # ------------------------------------------------------------------ clock
     def use_clock(self, clock: Optional[Callable[[], float]]
                   ) -> "BatchedInvocationEngine":
@@ -222,8 +364,9 @@ class BatchedInvocationEngine:
         instant instead of polling ``pump``; a new ``submit`` can only move
         the horizon EARLIER (windows never extend), so the driver re-queries
         after every enqueue."""
-        deadlines = [w.deadline for w in self._windows
-                     if math.isfinite(w.deadline)]
+        with self._qlock:
+            deadlines = [w.deadline for w in self._windows
+                         if math.isfinite(w.deadline)]
         return min(deadlines) if deadlines else None
 
     # ------------------------------------------------------------- coalescing
@@ -234,23 +377,33 @@ class BatchedInvocationEngine:
         window (or opens a new one closing ``window_ms`` after this
         request's arrival); a window that fills to ``max_batch`` dispatches
         immediately (flush-on-full) and its results await the next
-        ``pump``/``flush``."""
-        t = self._tickets
-        self._tickets += 1
-        self.stats.submitted += 1
+        ``pump``/``flush``.  Thread-safe: queue surgery happens under the
+        queue lock; a flush-on-full dispatch runs OUTSIDE it (under the
+        cycle lock), so concurrent submits never wait on a dispatch."""
+        self.stats.inc("submitted")
         t_arrive = t_send + self._hop_ms(client, node, payload_bytes)
-        p = _Pending(t, fn, node, x, t_send, t_arrive, client, payload_bytes)
-        key = (fn, node, client, payload_bytes)
-        w = self._open_window(key, t_arrive)
-        w.ps.append(p)
-        if self.max_batch is not None and len(w.ps) >= self.max_batch:
-            # full bucket flushes early: the batch executes when its last
-            # member arrives, no deadline wait.  Validate BEFORE taking the
-            # window off the queue so a KeyError really does leave it intact
-            self._validate([w])
-            self._windows.remove(w)
-            self.stats.auto_flushes += 1
-            self._ready.update(self._run_cycle([w], [None]))
+        full = None
+        with self._qlock:
+            t = self._tickets
+            self._tickets += 1
+            p = _Pending(t, fn, node, x, t_send, t_arrive, client,
+                         payload_bytes)
+            key = (fn, node, client, payload_bytes)
+            w = self._open_window(key, t_arrive)
+            w.ps.append(p)
+            if self.max_batch is not None and len(w.ps) >= self.max_batch:
+                # full bucket flushes early: the batch executes when its
+                # last member arrives, no deadline wait.  Validate BEFORE
+                # taking the window off the queue so a KeyError really
+                # does leave it intact
+                self._validate([w])
+                self._windows.remove(w)
+                full = w
+        if full is not None:
+            self.stats.inc("auto_flushes")
+            out = self._run_cycle([full], [None])
+            with self._qlock:
+                self._ready.update(out)
         return t
 
     def _open_window(self, key: Tuple, t_arrive: float) -> _Window:
@@ -275,30 +428,33 @@ class BatchedInvocationEngine:
         """Put already-redeemed results back for a later ``pump``/``flush``
         pickup.  Routers draining the shared engine use this to hand back
         tickets they do not own (another router's submissions)."""
-        self._ready.update(results)
+        with self._qlock:
+            self._ready.update(results)
 
     def pending(self) -> List[Dict[str, Any]]:
         """Read-only view of queued requests (public replacement for poking
         ``_queue``): one dict per request with ticket/fn/node/client/t_send
         and the window deadline it is waiting on."""
         out = []
-        for w in self._windows:
-            for p in w.ps:
-                out.append({"ticket": p.ticket, "fn": p.fn, "node": p.node,
-                            "client": p.client, "t_send": p.t_send,
-                            "deadline": w.deadline})
+        with self._qlock:
+            for w in self._windows:
+                for p in w.ps:
+                    out.append({"ticket": p.ticket, "fn": p.fn,
+                                "node": p.node, "client": p.client,
+                                "t_send": p.t_send, "deadline": w.deadline})
         return out
 
     def discard(self, ticket: int) -> bool:
         """Drop a queued request (e.g. a poisoned one after a failed flush)
         without dispatching it.  Returns whether the ticket was queued."""
-        for w in self._windows:
-            for p in w.ps:
-                if p.ticket == ticket:
-                    w.ps.remove(p)
-                    if not w.ps:
-                        self._windows.remove(w)
-                    return True
+        with self._qlock:
+            for w in self._windows:
+                for p in w.ps:
+                    if p.ticket == ticket:
+                        w.ps.remove(p)
+                        if not w.ps:
+                            self._windows.remove(w)
+                        return True
         return False
 
     def _validate(self, windows: Sequence[_Window]) -> None:
@@ -323,15 +479,17 @@ class BatchedInvocationEngine:
         rather than submission order (the usual trade of a coalescing
         server).  Callers needing strict cross-function ordering should
         flush between submissions."""
-        self._validate(self._windows)
-        windows, self._windows = self._windows, []
+        with self._qlock:
+            self._validate(self._windows)
+            windows, self._windows = self._windows, []
         cycle_out = (self._run_cycle(windows, [None] * len(windows))
                      if windows else {})
         # held-over results are only consumed on a clean cycle (a raising
         # cycle stashes its own partial results into _ready instead)
-        out = dict(self._ready)
+        with self._qlock:
+            out = dict(self._ready)
+            self._ready = {}
         out.update(cycle_out)
-        self._ready = {}
         return out
 
     def pump(self, until_t: Optional[float] = None) -> Dict[int, Any]:
@@ -346,18 +504,21 @@ class BatchedInvocationEngine:
         (``until_t = inf``, the pre-clock behaviour)."""
         if until_t is None:
             until_t = self.now()
-        due = [w for w in self._windows if w.deadline <= until_t]
-        self._validate(due)
+        with self._qlock:
+            due = [w for w in self._windows if w.deadline <= until_t]
+            self._validate(due)     # raises with the queue left intact
+            if due:
+                self._windows = [w for w in self._windows if w not in due]
         cycle_out = {}
         if due:
-            self._windows = [w for w in self._windows if w not in due]
-            self.stats.deadline_flushes += len(due)
+            self.stats.inc("deadline_flushes", len(due))
             floors = [w.deadline if math.isfinite(w.deadline) else None
                       for w in due]
             cycle_out = self._run_cycle(due, floors)
-        out = dict(self._ready)
+        with self._qlock:
+            out = dict(self._ready)
+            self._ready = {}
         out.update(cycle_out)
-        self._ready = {}
         return out
 
     # --------------------------------------------------------------- dispatch
@@ -382,79 +543,180 @@ class BatchedInvocationEngine:
         return [by_ticket[i] for i in range(n)]
 
     # ------------------------------------------------------------ flush cycle
+    def _store_key(self, fn: str, node: str) -> str:
+        """The pipeline key of a group: the store node its kv ops hit (the
+        serving node itself for stateless functions, which read that
+        node's clock).  Groups with the same key share a pool worker so
+        their store folds keep submission order."""
+        kg, store_node, _ = self.cluster._resolve_placement(
+            self.cluster.specs[fn], node)
+        return store_node if kg is not None else node
+
+    def _exec_slots(self, items: Sequence, body) -> List:
+        """Pool-worker body: run one store node's work items in order.
+        ``items`` is ``(slot, payload)`` pairs; returns ``(slot,
+        result-or-exception)`` — a failure is recorded, not raised, so
+        the node's later items still run (every item of a parallel cycle
+        has started; at-most-once)."""
+        out = []
+        for slot, payload in items:
+            try:
+                out.append((slot, body(payload)))
+            except Exception as e:
+                out.append((slot, e))
+        return out
+
+    def _exec_keyed(self, pool: Optional[_NodePool], by_key: Dict[str, List],
+                    body, n_slots: int, total_requests: int) -> List[Any]:
+        """Execute per-store-key item lists — inline when there is one
+        key or too little work to amortize executor handoff, else ONE
+        pool job per store key — and return results reassembled in SLOT
+        order: the serial pump's order, whichever worker finished first
+        (the determinism contract hangs on this reassembly).  Shared by
+        the top-level exec stage and every downstream wave."""
+        if (pool is None or len(by_key) == 1
+                or total_requests < self.min_parallel_requests):
+            parts = [self._exec_slots(items, body)
+                     for items in by_key.values()]
+        else:
+            futs = [pool.submit(k, self._exec_slots, items, body)
+                    for k, items in by_key.items()]
+            parts = [fut.result() for fut in futs]
+        out: List[Any] = [None] * n_slots
+        for part in parts:
+            for slot, r in part:
+                out[slot] = r
+        return out
+
     def _run_cycle(self, windows: Sequence[_Window],
                    floors: Sequence[Optional[float]]) -> Dict[int, Any]:
         """Dispatch ``windows`` as one cycle of parallel per-(fn, node)
-        timelines and return {ticket: InvokeResult}."""
-        c = self.cluster
-        self.stats.cycles += 1
-        cycle = _Cycle()
-        # shared deliver high-water mark: the latest arrival any group of
-        # this cycle brings to each store node (the cycle executes once its
-        # last member has arrived)
-        for w, floor in zip(windows, floors):
-            fn, node, _, _ = w.key
-            kg, store_node, _ = c._resolve_placement(c.specs[fn], node)
-            if kg is None:
-                continue
-            hi = max(max(p.t_arrive for p in w.ps), floor or -math.inf)
-            cycle.hwm[store_node] = max(cycle.hwm.get(store_node, -math.inf),
-                                        hi)
+        timelines and return {ticket: InvokeResult}.
 
-        frames: List[_Frame] = []
-        top: List[Tuple[_Window, List[_Frame]]] = []
-        err: Optional[BaseException] = None
-        for wi, (w, floor) in enumerate(zip(windows, floors)):
-            fn, node, client, payload = w.key
+        Three stages: (1) serial collect — per-store-node delivery
+        high-water marks from every window of the cycle; (2) exec — the
+        independent groups run in-line (serial pump) or on the per-store-
+        node executor pool (``use_workers``), including the downstream
+        waves; (3) serial merge — coalesced replication snapshots are
+        scheduled and per-ticket results assembled.  Cycles are serialized
+        by ``_cycle_lock``; stage 2 is the only place device dispatches
+        happen."""
+        with self._cycle_lock:
+            c = self.cluster
+            self.stats.inc("cycles")
+            cycle = _Cycle()
+            # ---- stage 1 (serial): shared deliver high-water mark — the
+            # latest arrival any group of this cycle brings to each store
+            # node (the cycle executes once its last member has arrived)
+            for w, floor in zip(windows, floors):
+                fn, node, _, _ = w.key
+                kg, store_node, _ = c._resolve_placement(c.specs[fn], node)
+                if kg is None:
+                    continue
+                hi = max(max(p.t_arrive for p in w.ps), floor or -math.inf)
+                cycle.hwm[store_node] = max(
+                    cycle.hwm.get(store_node, -math.inf), hi)
+
+            # ---- stage 2: execute the cycle's groups + downstream waves
+            pool = self._get_pool()
+            frames: List[_Frame] = []
+            top: List[Tuple[_Window, List[_Frame]]] = []
+            err: Optional[BaseException] = None
+            if pool is None:
+                for wi, (w, floor) in enumerate(zip(windows, floors)):
+                    fn, node, client, payload = w.key
+                    try:
+                        fs = self._exec_group(
+                            fn, node, [p.x for p in w.ps],
+                            [p.t_send for p in w.ps], client, payload,
+                            floor, cycle, 0, [None] * len(w.ps))
+                    except Exception as e:
+                        # the failing window is dropped (its effects may
+                        # have partially committed: at-most-once); windows
+                        # that never started dispatching go back on the
+                        # queue
+                        err = e
+                        with self._qlock:
+                            self._windows.extend(windows[wi + 1:])
+                        break
+                    top.append((w, fs))
+                    frames.extend(fs)
+            else:
+                # ONE job per store node: the node's worker executes all
+                # of that node's groups in window order (identical fold
+                # order to the serial pump), independent store nodes
+                # dispatch concurrently; results reassembled in window
+                # order so the frame list (and therefore the order
+                # downstream waves fold shared stores in) matches serial
+                def run_window(item, _cycle=cycle):
+                    w, floor = item
+                    fn, node, client, payload = w.key
+                    return self._exec_group(
+                        fn, node, [p.x for p in w.ps],
+                        [p.t_send for p in w.ps], client, payload,
+                        floor, _cycle, 0, [None] * len(w.ps))
+
+                by_key: Dict[str, List] = {}
+                for i, (w, floor) in enumerate(zip(windows, floors)):
+                    fn, node, _, _ = w.key
+                    by_key.setdefault(self._store_key(fn, node),
+                                      []).append((i, (w, floor)))
+                results = self._exec_keyed(
+                    pool, by_key, run_window, len(windows),
+                    sum(len(w.ps) for w in windows))
+                for w, fs in zip(windows, results):
+                    if isinstance(fs, BaseException):
+                        # at-most-once: the failing group is dropped;
+                        # every other group of the cycle has already
+                        # started and completes (or fails) on its own
+                        if err is None:
+                            err = fs
+                        continue
+                    top.append((w, fs))
+                    frames.extend(fs)
+
             try:
-                fs = self._exec_group(
-                    fn, node, [p.x for p in w.ps], [p.t_send for p in w.ps],
-                    client, payload, floor, cycle, depth=0,
-                    parents=[None] * len(w.ps))
+                self._run_downstream_waves(frames, cycle, pool)
             except Exception as e:
-                # the failing window is dropped (its effects may have
-                # partially committed: at-most-once); windows that never
-                # started dispatching go back on the queue
-                err = e
-                self._windows.extend(windows[wi + 1:])
-                break
-            top.append((w, fs))
-            frames.extend(fs)
+                if err is None:
+                    err = e
 
-        try:
-            self._run_downstream_waves(frames, cycle)
-        except Exception as e:
-            if err is None:
-                err = e
+            # ---- stage 3 (serial merge): ONE coalesced replication
+            # snapshot per written keygroup per node, with the post-cycle
+            # contents at the latest apply time.  Sorted for a
+            # deterministic event order regardless of which worker
+            # finished first
+            for (kg, store_node) in sorted(cycle.repl):
+                c._schedule_replication(kg, store_node,
+                                        cycle.repl[(kg, store_node)])
 
-        # one coalesced replication snapshot per written keygroup per node,
-        # with the post-cycle contents at the latest apply time
-        for (kg, store_node), t_apply in cycle.repl.items():
-            c._schedule_replication(kg, store_node, t_apply)
+            out: Dict[int, Any] = {}
+            for w, fs in top:
+                rs: List[Any] = []
+                for f in fs:
+                    if f.results is None:   # unfinalized under err: lost
+                        rs = None
+                        break
+                    rs.extend(f.results)
+                if rs is None:
+                    continue
+                self.stats.inc("windows_flushed")
+                self.stats.inc("requests_flushed", len(w.ps))
+                for p, r in zip(w.ps, rs):
+                    out[p.ticket] = r
+            if err is not None:
+                with self._qlock:
+                    self._ready.update(out)
+                raise err
+            return out
 
-        out: Dict[int, Any] = {}
-        for w, fs in top:
-            rs: List[Any] = []
-            for f in fs:
-                if f.results is None:       # unfinalized under err: lost
-                    rs = None
-                    break
-                rs.extend(f.results)
-            if rs is None:
-                continue
-            self.stats.windows_flushed += 1
-            self.stats.requests_flushed += len(w.ps)
-            for p, r in zip(w.ps, rs):
-                out[p.ticket] = r
-        if err is not None:
-            self._ready.update(out)
-            raise err
-        return out
-
-    def _run_downstream_waves(self, frames: List[_Frame],
-                              cycle: _Cycle) -> None:
+    def _run_downstream_waves(self, frames: List[_Frame], cycle: _Cycle,
+                              pool: Optional[_NodePool] = None) -> None:
         """Drive every frame's downstream chain to completion, coalescing
-        same-``(callee, target)`` requests across caller frames per wave."""
+        same-``(callee, target)`` requests across caller frames per wave.
+        With a pool, the wave's merged batches dispatch concurrently —
+        keyed by each callee's store node, so same-store batches keep
+        their (deterministic) wave order."""
         c = self.cluster
         while True:
             finalized = self._finalize_ready(frames)
@@ -484,16 +746,37 @@ class BatchedInvocationEngine:
                     f.outstanding = len(idxs)
                     break                   # one callee per frame per wave
             if reqs:
+                calls = []
                 for (callee, target, caller, payload), lst in reqs.items():
                     callers = {id(slot[0]) for _, _, slot in lst}
                     if len(callers) > 1:
-                        self.stats.downstream_coalesced += len(lst)
+                        self.stats.inc("downstream_coalesced", len(lst))
                     depth = 1 + max(slot[0].depth for _, _, slot in lst)
-                    frames.extend(self._exec_group(
-                        callee, target, [x for x, _, _ in lst],
-                        [t for _, t, _ in lst], caller, payload, floor=None,
-                        cycle=cycle, depth=depth,
-                        parents=[slot for _, _, slot in lst]))
+                    calls.append((callee, target,
+                                  (callee, target, [x for x, _, _ in lst],
+                                   [t for _, t, _ in lst], caller, payload,
+                                   None, cycle, depth,
+                                   [slot for _, _, slot in lst])))
+                if pool is None:
+                    for _, _, args in calls:
+                        frames.extend(self._exec_group(*args))
+                else:
+                    # same shape as stage 2: one job per store node per
+                    # wave (callee batches in wave order within it),
+                    # frames reassembled in wave order afterwards
+                    by_key: Dict[str, List] = {}
+                    for idx, (callee, target, args) in enumerate(calls):
+                        by_key.setdefault(self._store_key(callee, target),
+                                          []).append((idx, args))
+                    ordered = self._exec_keyed(
+                        pool, by_key, lambda args: self._exec_group(*args),
+                        len(calls),
+                        sum(len(args[2]) for _, _, args in calls))
+                    for fs in ordered:      # all batches have run: raise
+                        if isinstance(fs, BaseException):    # earliest
+                            raise fs        # error, like serial fail-fast
+                    for fs in ordered:
+                        frames.extend(fs)
                 continue
             # no fires this round: a frame may still have drained its todo
             # by skipping (all callees filtered) — loop once more so the
@@ -578,7 +861,7 @@ class BatchedInvocationEngine:
         nd = c.nodes[node]
         bhandler = nd.batched_handlers[fn_name]
         n = len(xs)
-        self.stats.dispatches += 1
+        self.stats.inc("dispatches")
 
         hop_ms = self._hop_ms(client, node, payload_bytes)
         t_arrives = [t + hop_ms for t in t_sends]
@@ -593,13 +876,8 @@ class BatchedInvocationEngine:
             hw = max(max(t_arrives), cycle.hwm.get(store_node, -math.inf))
             c._deliver_until(store_node, hw)
             snd = c.nodes[store_node]
-            store, clock = snd.stores[kg], snd.clock
         else:
             snd = None
-            store = arena_new(KeygroupSpec(name="_tmp",
-                                           value_width=spec.codec_width),
-                              MAX_NODES)
-            clock = nd.clock
 
         # pad to the bucket and run the one batched dispatch (host-side
         # numpy staging: jnp.stack over per-request device arrays costs more
@@ -613,12 +891,27 @@ class BatchedInvocationEngine:
                 lambda a: np.concatenate(
                     [a, np.repeat(a[:1], bucket - n, axis=0)]), xs_host)
         valid = np.arange(bucket) < n
-        new_store, new_clock, ys, ops = bhandler(
-            store, clock, jax.tree.map(jnp.asarray, xs_host),
-            jnp.asarray(valid), independent=(kg is None))
+
         if kg is not None:
-            snd.stores[kg] = new_store
-            snd.clock = new_clock
+            # hold the STORE node's lock across read-dispatch-write so the
+            # fold is atomic against any other toucher of this store
+            # (per-node pool workers already serialize engine work; the
+            # lock also covers a sequential ``invoke`` racing the pump)
+            with snd.lock:
+                store, clock = snd.stores[kg], snd.clock
+                new_store, new_clock, ys, ops = bhandler(
+                    store, clock, jax.tree.map(jnp.asarray, xs_host),
+                    jnp.asarray(valid), independent=False)
+                snd.stores[kg] = new_store
+                snd.clock = new_clock
+        else:
+            store = arena_new(KeygroupSpec(name="_tmp",
+                                           value_width=spec.codec_width),
+                              MAX_NODES)
+            clock = nd.clock
+            new_store, new_clock, ys, ops = bhandler(
+                store, clock, jax.tree.map(jnp.asarray, xs_host),
+                jnp.asarray(valid), independent=True)
 
         # per-request timeline: identical charges to Cluster.invoke
         compute = nd.compute_ms.get(fn_name, 0.0)
@@ -629,10 +922,11 @@ class BatchedInvocationEngine:
         if kg is not None and wrote:
             # defer to the cycle: ONE coalesced snapshot per (kg, node)
             rkey = (kg, store_node)
-            if rkey in cycle.repl:
-                self.stats.replication_coalesced += 1
-            cycle.repl[rkey] = max(cycle.repl.get(rkey, -math.inf),
-                                   max(t_applieds))
+            with cycle.lock:
+                if rkey in cycle.repl:
+                    self.stats.inc("replication_coalesced")
+                cycle.repl[rkey] = max(cycle.repl.get(rkey, -math.inf),
+                                       max(t_applieds))
 
         # one transfer for the whole batch, then host-side row views
         ys_host = jax.tree.map(np.asarray, jax.device_get(ys))

@@ -32,27 +32,53 @@ pair resolves to the earlier completion — reported under the primary
 ticket — and the loser is discarded from the queue if it never dispatched
 (at-most-once: a hedge only ever duplicates read-only work).  Hedge fire
 times are part of ``next_deadline()`` so a serving loop wakes for them.
+
+Hedge TARGET policy: every completion feeds a per-replica EWMA of observed
+latency (``stats.ewma_ms``); when a hedge fires, the duplicate goes to the
+lowest-EWMA session-satisfying replica — the tail-at-scale heuristic of
+preferring the replica that has actually been answering fastest — falling
+back to the nearest other replica while no replica has a sample yet.
+
+Thread-safety: the router's own bookkeeping (sessions, in-flight tickets,
+hedge pairs) lives behind one router lock, held only for host-side folds —
+``engine.pump``'s device dispatches always run OUTSIDE it, so submitting
+threads never wait on a dispatch in flight (see docs/batched_engine.md,
+"Concurrency contract").
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core.cluster import Cluster, InvokeResult
 from repro.core.consistency import Session
+from repro.core.engine import AtomicStats
 from repro.core.network import NetworkModel
 
 
 @dataclasses.dataclass
-class RouterStats:
+class RouterStats(AtomicStats):
     requests: int = 0
     hedges_fired: int = 0
     hedge_wins: int = 0
     hedges_suppressed: int = 0      # mutating handler: hedge would double-write
     redirects_for_consistency: int = 0
+    # per-replica EWMA of client-observed completion latency (ms) — the
+    # hedge-target policy's signal; see observe_latency
+    ewma_ms: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def observe_latency(self, node: str, ms: float, alpha: float) -> None:
+        """Fold one completion into ``node``'s latency EWMA (atomic).
+        ``alpha`` is the caller's smoothing factor (the router passes its
+        ``EWMA_ALPHA`` — the one source of truth)."""
+        with self._lock:
+            prev = self.ewma_ms.get(node)
+            self.ewma_ms[node] = (ms if prev is None
+                                  else alpha * ms + (1.0 - alpha) * prev)
 
 
 @dataclasses.dataclass
@@ -80,6 +106,9 @@ class _Hedge:
 
 
 class Router:
+    #: smoothing factor of the per-replica latency EWMA (hedge targeting)
+    EWMA_ALPHA = 0.2
+
     def __init__(self, cluster: Cluster, client: str = "client",
                  hedge_after_ms: Optional[float] = None):
         self.cluster = cluster
@@ -94,6 +123,10 @@ class Router:
         # deploy-time traces are static, so read-only-ness per fn is too:
         # cache it off the hedging hot path (is_read_only walks call graphs)
         self._ro_cache: Dict[str, bool] = {}
+        # guards sessions/_inflight/_hedges; held for host-side folds only,
+        # never across an engine dispatch (lock hierarchy: router lock >
+        # engine cycle lock > engine queue lock)
+        self._lock = threading.RLock()
 
     # ------------------------------------------------------------------ picks
     def candidates(self, fn_name: str) -> List[str]:
@@ -113,7 +146,7 @@ class Router:
                 for n in cands:
                     if self._satisfies(spec, n, session):
                         if n != cands[0]:
-                            self.stats.redirects_for_consistency += 1
+                            self.stats.inc("redirects_for_consistency")
                         return n
                 # nobody satisfies yet -> nearest replica; caller may retry
                 return cands[0]
@@ -146,10 +179,15 @@ class Router:
                payload_bytes: int = 64) -> InvokeResult:
         session = self._session(session_id)
         node = self.pick(fn_name, session)
-        self.stats.requests += 1
+        self.stats.inc("requests")
         res = self.cluster.invoke(fn_name, node, x, t_send=t_send,
                                   client=self.client,
                                   payload_bytes=payload_bytes)
+        # EVERY completion feeds its replica's latency EWMA exactly once —
+        # the primary here, the hedge below if one fires (so a slow
+        # primary that loses its hedge still teaches the policy it is slow)
+        self.stats.observe_latency(res.node, res.response_ms,
+                                   self.EWMA_ALPHA)
 
         # hedged request: if the primary exceeded the hedge deadline, fire the
         # second-nearest replica and take the earlier completion (straggler
@@ -161,19 +199,21 @@ class Router:
             cands = self.candidates(fn_name)
             if len(cands) > 1:
                 if self.cluster.is_read_only(fn_name):
-                    self.stats.hedges_fired += 1
+                    self.stats.inc("hedges_fired")
                     alt = self.cluster.invoke(
                         fn_name, cands[1], x,
                         t_send=t_send + self.hedge_after_ms,
                         client=self.client, payload_bytes=payload_bytes)
+                    self.stats.observe_latency(alt.node, alt.response_ms,
+                                               self.EWMA_ALPHA)
                     if alt.t_received < res.t_received:
-                        self.stats.hedge_wins += 1
+                        self.stats.inc("hedge_wins")
                         res = alt
                 else:
-                    self.stats.hedges_suppressed += 1
-
+                    self.stats.inc("hedges_suppressed")
         if session is not None:
-            self._observe(session, fn_name, res)
+            with self._lock:
+                self._observe(session, fn_name, res)
         return res
 
     def _observe(self, session: Session, fn_name: str,
@@ -209,15 +249,23 @@ class Router:
         returned ticket is redeemed by ``pump``/``flush``, which also fold
         the result back into the session.  With ``hedge_after_ms`` set,
         read-only requests whose window outlives the hedge deadline are
-        hedged at the next ``pump`` (windowed hedge, see module docstring)."""
-        session = self._session(session_id)
-        node = self.pick(fn_name, session)
-        self.stats.requests += 1
-        ticket = self.cluster.engine.submit(fn_name, node, x, t_send=t_send,
+        hedged at the next ``pump`` (windowed hedge, see module docstring).
+        Thread-safe: many client threads may submit concurrently while the
+        serving thread pumps — the engine enqueue (which can auto-flush a
+        full window, a whole dispatch cycle) runs OUTSIDE the router lock.
+        A result that surfaces before the ticket registers is handed back
+        to the engine as foreign and redeemed by the next pump."""
+        with self._lock:
+            session = self._session(session_id)
+            node = self.pick(fn_name, session)
+            self.stats.inc("requests")
+        ticket = self.cluster.engine.submit(fn_name, node, x,
+                                            t_send=t_send,
                                             client=self.client,
                                             payload_bytes=payload_bytes)
-        self._inflight[ticket] = _InFlight(fn_name, session_id, x, t_send,
-                                           node, payload_bytes)
+        with self._lock:
+            self._inflight[ticket] = _InFlight(fn_name, session_id, x, t_send,
+                                               node, payload_bytes)
         return ticket
 
     def pump(self, until_t: Optional[float] = None,
@@ -237,19 +285,24 @@ class Router:
             until_t = eng.now()     # the one clock-resolution convention
         if hedge:
             self._maybe_hedge(until_t)
-        return self._fold(eng.pump(until_t))
+        results = eng.pump(until_t)     # dispatch OUTSIDE the router lock
+        with self._lock:
+            return self._fold(results)
 
     def flush(self) -> Dict[int, InvokeResult]:
         """Drain the engine regardless of window deadlines (own tickets
         only, like ``pump``).  No hedges fire: flushing ends every wait
         immediately, so no window outlives its hedge deadline."""
-        return self._fold(self.cluster.engine.flush())
+        results = self.cluster.engine.flush()
+        with self._lock:
+            return self._fold(results)
 
     def tracks(self, ticket: int) -> bool:
         """Whether ``ticket`` can still produce a result through this
         router (in flight, or a member of an unresolved hedged pair).  A
         serving loop fails the request's future once this turns False."""
-        return ticket in self._inflight or ticket in self._hedges
+        with self._lock:
+            return ticket in self._inflight or ticket in self._hedges
 
     def reconcile(self) -> Dict[int, InvokeResult]:
         """Settle state after a flush cycle RAISED: the failing group's
@@ -258,7 +311,9 @@ class Router:
         failed cycle already stashed (groups that completed cleanly) — and
         the fold prunes tickets that can no longer complete, so a serving
         loop can fail their futures instead of hanging them."""
-        return self._fold(self.cluster.engine.pump(-math.inf))
+        results = self.cluster.engine.pump(-math.inf)
+        with self._lock:
+            return self._fold(results)
 
     def next_deadline(self) -> Optional[float]:
         """Earliest virtual instant at which this router has scheduled
@@ -269,7 +324,8 @@ class Router:
         due = []
         if (d := self.cluster.engine.next_deadline()) is not None:
             due.append(d)
-        due.extend(hd for _, _, hd in self._hedgeable())
+        with self._lock:
+            due.extend(hd for _, _, hd in self._hedgeable())
         return min(due) if due else None
 
     def _read_only(self, fn_name: str) -> bool:
@@ -300,7 +356,7 @@ class Router:
                 continue            # dispatched, or window beats the hedge
             if not self._read_only(m.fn):
                 m.hedge_decided = True      # can never hedge: decide now
-                self.stats.hedges_suppressed += 1
+                self.stats.inc("hedges_suppressed")
                 continue
             out.append((t, m, hd))
         return out
@@ -309,37 +365,60 @@ class Router:
         """Fire the windowed hedge for every queued read-only ticket whose
         window outlives its hedge deadline (``t_send + hedge_after_ms``),
         once the pump horizon has reached that instant.  The duplicate is
-        submitted to the nearest other replica that can still satisfy the
-        request's session, with the hedge instant as its send time —
-        deterministic in virtual time, independent of pump cadence."""
-        for ticket, m, hd in self._hedgeable():
-            if until_t < hd:
-                continue            # the hedge instant is still ahead
-            m.hedge_decided = True  # one fire decision per ticket
-            alt = self._hedge_target(m)
-            if alt is None:
-                continue            # no second replica can serve this one
-            self.stats.hedges_fired += 1
+        submitted to the hedge-target replica (lowest EWMA) that can still
+        satisfy the request's session, with the hedge instant as its send
+        time — deterministic in virtual time, independent of pump cadence.
+        Each fire DECIDES under the router lock immediately before its
+        own engine submit, which runs outside the lock (it can auto-flush
+        a whole dispatch on a full window, like ``submit``) — so a submit
+        that raises mid-pass leaves the REMAINING tickets undecided and
+        they retry at the next pump instead of silently losing their
+        hedge."""
+        with self._lock:
+            due = [(t, m) for t, m, hd in self._hedgeable()
+                   if until_t >= hd]
+        for ticket, m in due:
+            with self._lock:
+                if m.hedge_decided:
+                    continue        # raced another pump: decided there
+                m.hedge_decided = True  # one fire decision per ticket
+                alt = self._hedge_target(m)
+                if alt is None:
+                    continue        # no second replica can serve this one
+                self.stats.inc("hedges_fired")
+                hd = m.t_send + self.hedge_after_ms
             ht = self.cluster.engine.submit(m.fn, alt, m.x, t_send=hd,
                                             client=self.client,
                                             payload_bytes=m.payload_bytes)
-            pair = _Hedge(primary=ticket, hedge=ht)
-            self._hedges[ticket] = self._hedges[ht] = pair
+            with self._lock:
+                pair = _Hedge(primary=ticket, hedge=ht)
+                self._hedges[ticket] = self._hedges[ht] = pair
 
     def _hedge_target(self, m: _InFlight) -> Optional[str]:
-        """Nearest replica other than the primary's that can serve the
-        request — honouring the session's consistency requirement exactly
-        like ``pick``, so a hedge never wins with a stale read."""
+        """Where the duplicate goes: among the replicas other than the
+        primary's that can serve the request (honouring the session's
+        consistency requirement exactly like ``pick``, so a hedge never
+        wins with a stale read), prefer the one with the LOWEST latency
+        EWMA — the replica that has actually been answering fastest.
+        While no eligible replica has a sample yet, fall back to the
+        nearest one (the candidates come RTT-sorted)."""
         session = (self.sessions.get(m.session_id)
                    if m.session_id is not None else None)
         spec = self.cluster.specs[m.fn]
+        eligible = []
         for n in self.candidates(m.fn):
             if n == m.node:
                 continue
             if (session is None or not spec.keygroups
                     or self._satisfies(spec, n, session)):
-                return n
-        return None
+                eligible.append(n)
+        if not eligible:
+            return None
+        ewma = self.stats.ewma_ms
+        sampled = [n for n in eligible if n in ewma]
+        if sampled:
+            return min(sampled, key=lambda n: ewma[n])
+        return eligible[0]
 
     def _fold(self, results: Dict[int, InvokeResult]) -> Dict[int, InvokeResult]:
         mine: Dict[int, InvokeResult] = {}
@@ -421,8 +500,18 @@ class Router:
 
     def _settle(self, pair: _Hedge, winner: InvokeResult,
                 hedge_won: bool) -> InvokeResult:
+        # EVERY completion of the pair feeds its replica's latency EWMA
+        # with its OWN (pre-restamp) latency — the loser included, so a
+        # straggler that keeps losing hedges still teaches the policy it
+        # is slow (dropping losers is survivorship bias), and the winner's
+        # sample is its true service latency, not the client-observed
+        # value inflated by the window wait before the hedge fired
+        for res in (pair.primary_res, pair.hedge_res):
+            if res is not None:
+                self.stats.observe_latency(res.node, res.response_ms,
+                                           self.EWMA_ALPHA)
         if hedge_won:
-            self.stats.hedge_wins += 1
+            self.stats.inc("hedge_wins")
             # re-stamp the winner against the PRIMARY's send instant: the
             # hedge's own t_send is the later fire time, and the client
             # observes latency from its original submission
@@ -430,11 +519,15 @@ class Router:
             winner = dataclasses.replace(
                 winner, t_sent=t0, response_ms=winner.t_received - t0)
         del self._hedges[pair.primary], self._hedges[pair.hedge]
-        self._finish(pair.primary, winner)
+        self._finish(pair.primary, winner, observe_latency=False)
         return winner
 
-    def _finish(self, ticket: int, res: InvokeResult) -> None:
+    def _finish(self, ticket: int, res: InvokeResult,
+                observe_latency: bool = True) -> None:
         m = self._inflight.pop(ticket)
+        if observe_latency:     # hedged pairs observed both members in
+            self.stats.observe_latency(res.node, res.response_ms,
+                                       self.EWMA_ALPHA)      # _settle
         session = (self.sessions.get(m.session_id)
                    if m.session_id is not None else None)
         if session is not None:

@@ -22,6 +22,9 @@ import zlib
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: long-running integration test (subprocess meshes)")
+    config.addinivalue_line(
+        "markers", "tier0: fast pre-commit subset (<60 s total, no heavy "
+        "jit) — run with `pytest -m tier0` or scripts/verify.sh --fast")
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,403 @@
+"""Concurrent dispatch pipeline (executor-per-store-node pump).
+
+The contract under test: parallelism must be semantically INVISIBLE —
+``workers=4`` produces the identical ticket→result map, converged stores
+and clocks as ``workers=1`` on the same submission stream (same-store-node
+groups share a single pool worker, so every fold keeps its order); stats
+counters stay exact under racing submitter threads; and the serving loop's
+deadline horizon strictly progresses under the executor pump (the guard
+against the PR-3 pump-loop hang pattern).  Plus the asyncio front-end:
+many logical clients on one event loop, no thread per client.
+"""
+import asyncio
+import math
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.tier0  # fast pre-commit subset
+
+from repro.configs.base import ReplicationPolicy
+from repro.core import Cluster, Router, enoki_function, get_function
+from repro.core.engine import BatchedInvocationEngine, EngineStats
+from repro.core.store import store_contents, stores_equal
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@enoki_function(name="cp_mix", keygroups=["cpkg"], codec_width=8)
+def cp_mix(kv, x):
+    cur, found = kv.get("acc")
+    kv.set("acc", cur + x)
+    return cur[:2] + x[:2]
+
+
+@enoki_function(name="cp_peek", keygroups=["cpkg"], codec_width=8)
+def cp_peek(kv, x):
+    cur, found = kv.get("acc")
+    return cur[:2]
+
+
+@enoki_function(name="cp_central", keygroups=["cpcloudkg"], codec_width=8)
+def cp_central(kv, x):
+    cur, _ = kv.get("n")
+    kv.set("n", cur + 1.0)
+    return cur[:1]
+
+
+@enoki_function(name="cp_src", keygroups=[], calls=["cp_sink"], codec_width=8)
+def cp_src(kv, x):
+    return x[:2]
+
+
+@enoki_function(name="cp_sink", keygroups=["cpsinkkg"], codec_width=8)
+def cp_sink(kv, x):
+    cur, _ = kv.get("n")
+    kv.set("n", cur + 1.0)
+    return x[:1]
+
+
+def _x(v=1.0):
+    return np.full(8, v, np.float32)
+
+
+def _cluster():
+    """The fixed 3-node topology of the determinism acceptance check."""
+    c = Cluster({"edge": "edge", "edge2": "edge", "cloud": "cloud"},
+                measure_compute=False)
+    c.deploy(get_function("cp_mix"), ["edge", "edge2"],
+             policy=ReplicationPolicy.REPLICATED)
+    c.deploy(get_function("cp_peek"), ["edge", "edge2"],
+             policy=ReplicationPolicy.REPLICATED)
+    # a CLOUD_CENTRAL placement so a third store node is in play
+    c.deploy(get_function("cp_central"), ["edge"],
+             policy=ReplicationPolicy.CLOUD_CENTRAL)
+    # a stateless caller + stateful callee: downstream waves in the cycle
+    c.deploy(get_function("cp_sink"), ["edge"])
+    c.deploy(get_function("cp_src"), ["edge"])
+    return c
+
+
+def _submit_stream(c, n=24):
+    """A fixed mixed stream: three store nodes, two clients, downstream
+    calls, staggered send times — several windows per flush cycle."""
+    tks = []
+    for i in range(n):
+        t = i * 0.7
+        node = ("edge", "edge2")[i % 2]
+        client = ("client", "client2")[(i // 2) % 2]
+        fn = ("cp_mix", "cp_peek", "cp_central", "cp_src")[i % 4]
+        at = "edge" if fn in ("cp_central", "cp_src") else node
+        tks.append(c.engine.submit(fn, at, _x(float(i)), t_send=t,
+                                   client=client))
+    return tks
+
+
+def _result_key(r):
+    return (np.asarray(r.output).tobytes(), r.t_sent, r.t_received,
+            r.t_applied, r.response_ms, r.node, tuple(r.chain),
+            tuple(r.kv_ops))
+
+
+def _run_pipeline(workers):
+    c = _cluster()
+    c.engine = BatchedInvocationEngine(c, window_ms=5.0, workers=workers)
+    c.engine.min_parallel_requests = 1      # force the pool on this stream
+    tks = _submit_stream(c)
+    out = {}
+    # two partial pumps + a drain: multiple cycles through the shared pool
+    out.update(c.engine.pump(8.0))
+    out.update(c.engine.pump(16.0))
+    out.update(c.engine.pump(math.inf))
+    assert set(out) == set(tks)
+    c.flush_replication()
+    c.engine.close()
+    return c, {t: _result_key(r) for t, r in out.items()}
+
+
+def test_parallel_pump_matches_serial_results():
+    """The acceptance determinism check: on the fixed 3-node topology the
+    workers=4 pump yields a ticket→result map EQUAL to workers=1, and the
+    clusters converge to identical stores and clocks."""
+    c1, m1 = _run_pipeline(workers=1)
+    c4, m4 = _run_pipeline(workers=4)
+    assert m1 == m4
+    for kg, nodes in (("cpkg", ("edge", "edge2")),
+                      ("cpcloudkg", ("cloud",)),
+                      ("cpsinkkg", ("edge",))):
+        for nd in nodes:
+            assert stores_equal(c1.nodes[nd].stores[kg],
+                                c4.nodes[nd].stores[kg]), (kg, nd)
+    for nd in ("edge", "edge2", "cloud"):
+        np.testing.assert_array_equal(np.asarray(c1.nodes[nd].clock),
+                                      np.asarray(c4.nodes[nd].clock))
+    # the parallel run coalesced replication exactly like the serial one
+    assert (c1.engine.stats.replication_coalesced
+            == c4.engine.stats.replication_coalesced)
+    assert c1.engine.stats.dispatches == c4.engine.stats.dispatches
+
+
+@enoki_function(name="cp_nc_add", keygroups=["cpnckg"], codec_width=8)
+def cp_nc_add(kv, x):
+    cur, _ = kv.get("n")
+    kv.set("n", cur + 1.0)
+    return x[:1]
+
+
+@enoki_function(name="cp_nc_mul", keygroups=["cpnckg"], codec_width=8)
+def cp_nc_mul(kv, x):
+    cur, _ = kv.get("n")
+    kv.set("n", cur * 2.0 + 1.0)
+    return x[:1]
+
+
+@enoki_function(name="cp_call_add", keygroups=[], calls=["cp_nc_add"],
+                codec_width=8)
+def cp_call_add(kv, x):
+    return x[:1]
+
+
+@enoki_function(name="cp_call_mul", keygroups=[], calls=["cp_nc_mul"],
+                codec_width=8)
+def cp_call_mul(kv, x):
+    return x[:1]
+
+
+def test_wave_batches_on_shared_store_fold_in_serial_order():
+    """Regression: two DISTINCT wave batches (different callees, fired
+    from different caller nodes) that land on the SAME store node must
+    fold in the serial pump's wave order under the parallel pump.  The
+    sinks' writes do not commute (n+1 vs n*2+1), so any reordering
+    diverges the store — the original parallel pipeline grouped frames by
+    store node and got exactly this wrong."""
+    stores, maps = [], []
+    for workers in (1, 4):
+        c = Cluster({"edge": "edge", "edge2": "edge", "cloud": "cloud"},
+                    measure_compute=False)
+        # both sinks write ONE CLOUD_CENTRAL keygroup (store node: cloud);
+        # callers are stateless, one per edge node, so the wave carries
+        # two distinct (callee, target, caller-node) batches to cloud
+        c.deploy(get_function("cp_nc_add"), ["edge2"],
+                 policy=ReplicationPolicy.CLOUD_CENTRAL)
+        c.deploy(get_function("cp_nc_mul"), ["edge"],
+                 policy=ReplicationPolicy.CLOUD_CENTRAL)
+        c.deploy(get_function("cp_call_add"), ["edge2"])
+        c.deploy(get_function("cp_call_mul"), ["edge"])
+        c.deploy(get_function("cp_mix"), ["edge", "edge2"])
+        c.engine = BatchedInvocationEngine(c, window_ms=5.0,
+                                           workers=workers)
+        c.engine.min_parallel_requests = 1
+        tks = [c.engine.submit("cp_mix", "edge", _x(), t_send=0.0),
+               c.engine.submit("cp_call_add", "edge2", _x(), t_send=0.1),
+               c.engine.submit("cp_call_mul", "edge", _x(), t_send=0.2),
+               c.engine.submit("cp_mix", "edge2", _x(), t_send=0.3)]
+        out = c.engine.pump(math.inf)
+        assert set(out) == set(tks)
+        c.engine.close()
+        stores.append(store_contents(c.nodes["cloud"].stores["cpnckg"]))
+        maps.append({t: _result_key(r) for t, r in out.items()})
+    assert stores[0] == stores[1]           # add-then-mul, both runs
+    assert maps[0] == maps[1]
+
+
+def test_parallel_pump_flush_on_full_matches_serial():
+    """Flush-on-full (auto-flush on the submitting thread) under the
+    executor pump still matches the serial engine."""
+    maps = []
+    for workers in (1, 4):
+        c = _cluster()
+        c.engine = BatchedInvocationEngine(c, window_ms=100.0, max_batch=4,
+                                           workers=workers)
+        tks = [c.engine.submit("cp_mix", ("edge", "edge2")[i % 2],
+                               _x(float(i)), t_send=float(i))
+               for i in range(10)]
+        out = c.engine.pump(math.inf)
+        assert set(out) == set(tks)
+        assert c.engine.stats.auto_flushes == 2     # two full 4-windows
+        c.engine.close()
+        maps.append({t: _result_key(r) for t, r in out.items()})
+    assert maps[0] == maps[1]
+
+
+def test_next_deadline_strictly_progresses_under_executor_pump():
+    """Pump-by-deadline with the parallel pump must terminate: every
+    next_deadline() is strictly later than the one just pumped (guards
+    the known pump-loop hang pattern), including hedge fire instants."""
+    c = _cluster()
+    c.engine = BatchedInvocationEngine(c, window_ms=10.0, workers=4)
+    c.engine.min_parallel_requests = 1      # force the pool path
+    c.set_compute_ms("edge", "cp_peek", 40.0)       # straggler: hedge fires
+    router = Router(c, hedge_after_ms=4.0)
+    for i in range(6):
+        router.submit("cp_peek", _x(), t_send=i * 7.0)
+    out, last, steps = {}, -math.inf, 0
+    while (nd := router.next_deadline()) is not None:
+        assert nd > last, f"horizon stalled at {nd}"
+        last = nd
+        out.update(router.pump(nd))
+        steps += 1
+        assert steps < 64, "pump loop failed to terminate"
+    out.update(router.pump(math.inf))
+    assert len(out) == 6
+    c.engine.close()
+
+
+def test_stats_inc_is_exact_under_contention():
+    """The one mutation path of every stats counter is atomic: hammering
+    inc() from many threads loses nothing."""
+    stats = EngineStats()
+    n_threads, per_thread = 8, 500
+
+    def bump():
+        for _ in range(per_thread):
+            stats.inc("submitted")
+            stats.inc("requests_flushed", 2)
+
+    threads = [threading.Thread(target=bump) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert stats.submitted == n_threads * per_thread
+    assert stats.requests_flushed == 2 * n_threads * per_thread
+
+
+def _serve_cluster():
+    c = Cluster({"edge": "edge", "edge2": "edge", "cloud": "cloud"},
+                measure_compute=False)
+    c.deploy(get_function("cp_mix"), ["edge", "edge2"],
+             policy=ReplicationPolicy.REPLICATED)
+    c.deploy(get_function("cp_peek"), ["edge", "edge2"],
+             policy=ReplicationPolicy.REPLICATED)
+    x = _x()
+    for b in (1, 8, 64):                    # warm jit buckets off the clock
+        c.invoke_batch("cp_mix", "edge", [x] * b)
+        c.invoke_batch("cp_peek", "edge", [x] * b)
+    c.flush_replication()
+    return c
+
+
+def _count(c, node):
+    contents = store_contents(c.nodes[node].stores["cpkg"])
+    return list(contents.values())[0][2][0] if contents else 0.0
+
+
+def test_server_stress_racing_submitters():
+    """N submitter threads race the serving loop and each other: every
+    future resolves, no ticket is lost or served twice, the counter
+    advances exactly once per write, and the stats ledger balances."""
+    from repro.launch.faas_server import FaasServer
+    c = _serve_cluster()
+    seeded = _count(c, "edge")
+    n_threads, per_thread = 6, 12
+    total = n_threads * per_thread
+    results, errors = [], []
+    lock = threading.Lock()
+    flushed_before = c.engine.stats.requests_flushed    # warm-up traffic
+    with FaasServer(c, window_ms=5.0, time_scale=200.0, workers=4) as srv:
+        def client(cid):
+            try:
+                futs = [srv.submit("cp_mix", _x(), session_id=f"s{cid}")
+                        for _ in range(per_thread)]
+                rs = [f.result(timeout=60.0) for f in futs]
+            except BaseException as e:
+                with lock:
+                    errors.append(e)
+                return
+            with lock:
+                results.extend((f.ticket, r) for f, r in zip(futs, rs))
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(n_threads)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert time.perf_counter() - t0 < 60.0
+    assert errors == []
+    # no lost or duplicated tickets
+    assert len(results) == total
+    assert len({tk for tk, _ in results}) == total
+    # every write landed exactly once (the counter is a perfect ledger)
+    c.flush_replication()
+    assert _count(c, "edge") == _count(c, "edge2") == seeded + total
+    # stats sum correctly under contention
+    assert srv.stats.submitted == total
+    assert srv.stats.served == total
+    assert srv.stats.lost == 0
+    assert srv.router.stats.requests == total
+    assert c.engine.stats.requests_flushed - flushed_before == total
+    # per-replica latency EWMAs got fed by the completions
+    assert srv.router.stats.ewma_ms          # non-empty
+    assert all(v > 0 for v in srv.router.stats.ewma_ms.values())
+
+
+def test_asyncio_front_end_many_logical_clients():
+    """One event loop hosts many logical closed-loop clients through
+    async_submit — no thread per client — and the result ledger matches
+    the thread-based drivers'."""
+    from repro.launch.faas_server import (FaasServer, serve_closed_loop_async)
+    c = _serve_cluster()
+    seeded = _count(c, "edge")
+    n = 24
+
+    async def drive(srv):
+        # a lone await first: async_submit resolves like a plain future
+        r0 = await srv.async_submit("cp_peek", _x())
+        assert float(np.asarray(r0.output)[0]) == seeded
+        return await serve_closed_loop_async(
+            srv, "cp_mix", lambda i: _x(), n_requests=n, concurrency=8,
+            timeout_s=60.0, session_prefix="ac")
+
+    with FaasServer(c, window_ms=5.0, time_scale=200.0, workers=2) as srv:
+        results = asyncio.run(drive(srv))
+    assert len(results) == n
+    assert srv.stats.lost == 0
+    c.flush_replication()
+    assert _count(c, "edge") == seeded + n
+    # sessions folded every batched write (reads-your-writes held)
+    assert srv.router.sessions["ac0"] is not None
+
+
+def test_cancelled_future_does_not_kill_the_serving_loop():
+    """A client cancelling its future (asyncio task cancellation reaches
+    the ServedRequest through wrap_future) must not crash the serving
+    thread when its result arrives — later requests still serve."""
+    from repro.launch.faas_server import FaasServer
+    c = _serve_cluster()
+    with FaasServer(c, window_ms=50.0, time_scale=50.0, workers=2) as srv:
+        doomed = srv.submit("cp_peek", _x())
+        assert doomed.cancel()              # still queued: cancel wins
+        fut = srv.submit("cp_peek", _x())
+        res = fut.result(timeout=30.0)      # loop survived the delivery
+        assert res is not None
+        # an asyncio timeout cancelling mid-flight is the same path
+        async def impatient():
+            try:
+                await asyncio.wait_for(
+                    srv.async_submit("cp_peek", _x()), timeout=1e-4)
+            except asyncio.TimeoutError:
+                pass
+        asyncio.run(impatient())
+        assert srv.submit("cp_peek", _x()).result(timeout=30.0) is not None
+    assert srv.stats.lost == 0              # cancelled != lost
+
+
+def test_use_workers_validation_and_close_idempotent():
+    c = _cluster()
+    with pytest.raises(ValueError, match="workers"):
+        c.engine.use_workers(0)
+    c.engine.use_workers(2)
+    t = c.engine.submit("cp_peek", "edge", _x())
+    assert set(c.engine.flush()) == {t}
+    c.engine.close()
+    c.engine.close()                        # idempotent
+    # pool rebuilds lazily after close
+    t2 = c.engine.submit("cp_peek", "edge", _x())
+    assert set(c.engine.flush()) == {t2}
+    c.engine.close()

@@ -88,6 +88,11 @@ def test_windowed_hedge_wins_on_straggler_and_takes_earlier_completion():
     # client observes latency from its original submission
     assert out[t].t_sent == 0.0
     assert out[t].response_ms == pytest.approx(out[t].t_received)
+    # BOTH members fed the latency EWMA with their OWN latency: the slow
+    # primary recorded its true (slow) completion even though it lost,
+    # and the winner's sample is not inflated by the pre-hedge wait
+    assert router.stats.ewma_ms["edge"] > router.stats.ewma_ms["edge2"]
+    assert router.stats.ewma_ms["edge2"] < out[t].response_ms
     # unhedged run for comparison: strictly slower completion
     c2 = _cluster()
     _deploy_both(c2)
@@ -212,6 +217,52 @@ def test_hedge_respects_session_consistency():
     assert out[t].node == "edge2"
     # the session read actually saw its own write
     assert float(np.asarray(out[t].output)[0]) == 2.0   # seed + far write
+
+
+def test_hedge_target_prefers_lowest_ewma_replica():
+    """The hedge-target policy: with latency samples, the duplicate goes
+    to the lowest-EWMA session-satisfying replica even when another is
+    nearer; with no samples it falls back to the nearest other replica."""
+    for ewma, expect in (({}, "edge2"),                 # no samples: nearest
+                         ({"edge2": 80.0, "cloud": 2.0}, "cloud"),
+                         ({"edge2": 3.0, "cloud": 90.0}, "edge2")):
+        c = _cluster()
+        c.deploy(get_function("fs_bump"), ["edge", "edge2", "cloud"])
+        c.deploy(get_function("fs_peek"), ["edge", "edge2", "cloud"])
+        c.invoke("fs_bump", "edge", jnp.zeros((1,)))
+        c.flush_replication()
+        c.engine.configure(window_ms=20.0)
+        router = Router(c, hedge_after_ms=5.0)
+        router.stats.ewma_ms.update(ewma)
+        t = router.submit("fs_peek", _x(), t_send=0.0)
+        assert router.pump(5.0) == {}           # hedge fires at t=5
+        assert router.stats.hedges_fired == 1
+        queued = {p["ticket"]: p["node"] for p in c.engine.pending()}
+        hedge_nodes = [nd for tk, nd in queued.items() if tk != t]
+        assert hedge_nodes == [expect], (ewma, hedge_nodes)
+        out = _pump_all(router, 1)
+        assert set(out) == {t}
+
+
+def test_completions_feed_per_replica_latency_ewma():
+    """Every completion (sequential and batched path) folds into its
+    replica's EWMA with Router.EWMA_ALPHA smoothing."""
+    c = _cluster()
+    _deploy_both(c)
+    router = Router(c)
+    r1 = router.invoke("fs_peek", _x(), t_send=0.0)
+    assert router.stats.ewma_ms[r1.node] == pytest.approx(r1.response_ms)
+    r2 = router.invoke("fs_peek", _x(), t_send=10.0)
+    a = Router.EWMA_ALPHA
+    assert router.stats.ewma_ms[r2.node] == pytest.approx(
+        a * r2.response_ms + (1 - a) * r1.response_ms)
+    # batched path feeds the same signal
+    c.engine.configure(window_ms=5.0)
+    t = router.submit("fs_peek", _x(), t_send=20.0)
+    out = _pump_all(router, 1)
+    assert router.stats.ewma_ms[out[t].node] == pytest.approx(
+        a * out[t].response_ms
+        + (1 - a) * (a * r2.response_ms + (1 - a) * r1.response_ms))
 
 
 # ---------------------------------------------------------------------------

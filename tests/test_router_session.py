@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.tier0  # fast pre-commit subset
+
 from repro.configs.base import ReplicationPolicy
 from repro.core import Cluster, Router, enoki_function, get_function
 from repro.core.store import store_contents

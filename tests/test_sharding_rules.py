@@ -4,6 +4,8 @@ the property the dry-run relies on (a violation fails at .compile())."""
 import jax
 import jax.numpy as jnp
 import pytest
+
+pytestmark = pytest.mark.tier0  # fast pre-commit subset
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import (ARCH_IDS, ParallelConfig, SHAPES, get_arch)

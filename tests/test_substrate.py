@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.tier0  # fast pre-commit subset
+
 jax.config.update("jax_platform_name", "cpu")
 
 

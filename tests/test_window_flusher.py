@@ -10,6 +10,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.tier0  # fast pre-commit subset
+
 from repro.configs.base import ReplicationPolicy
 from repro.core import Cluster, enoki_function, get_function
 from repro.core.store import store_contents
@@ -306,7 +308,7 @@ def test_cycle_coalesces_replication_snapshots():
                         client="client2")
     c.engine.flush()
     # ONE replication event for the whole cycle, not one per group
-    assert len(c._events) == 1
+    assert len(c.pending_replication()) == 1
     assert c.engine.stats.replication_coalesced == 1
     c.flush_replication()
     assert (store_contents(c.nodes["edge"].stores["wfkg"])
@@ -324,8 +326,8 @@ def _heap_ok(events):
 
 
 def test_deliver_until_applies_in_arrival_order(monkeypatch):
-    """Three staggered snapshots scrambled in the pending list must merge in
-    (arrival, seq) order, and the keep-list must stay a valid heap."""
+    """Three staggered snapshots scrambled in a node's pending queue must
+    merge in (arrival, seq) order regardless of raw list layout."""
     import repro.core.cluster as cluster_mod
     c = _cluster()
     c.deploy(get_function("wf_set"), ["edge", "edge2"],
@@ -333,41 +335,51 @@ def test_deliver_until_applies_in_arrival_order(monkeypatch):
     for i, t in enumerate((0.0, 100.0, 200.0)):
         c.invoke("wf_set", "edge", np.full(4, float(i + 1), np.float32),
                  t_send=t)
-    assert len(c._events) == 3
-    e1, e2, e3 = sorted(c._events)
-    c._events = [e3, e1, e2]                 # scrambled raw order
+    q = c._queues["edge2"]
+    assert len(q.heap) == 3
+    e1, e2, e3 = sorted(q.heap)
+    q.heap = [e3, e1, e2]                    # scrambled raw order
 
     merged_arrivals = []
-    real_merge = cluster_mod.merge_stores
+    real_merge = cluster_mod.merge_stores_jit
 
     def spying_merge(a, b):
         merged_arrivals.append(next(ev[0] for ev in (e1, e2, e3)
-                                    if ev[4] is b))
+                                    if ev[3] is b))
         return real_merge(a, b)
 
-    monkeypatch.setattr(cluster_mod, "merge_stores", spying_merge)
+    monkeypatch.setattr(cluster_mod, "merge_stores_jit", spying_merge)
     c._deliver_until("edge2", float("inf"))
     assert merged_arrivals == [e1[0], e2[0], e3[0]]   # network order
-    assert c._events == []
+    assert q.heap == []
+    assert c.pending_replication("edge2") == []
     val = store_contents(c.nodes["edge2"].stores["wfsetkg"]).popitem()[1][2]
     assert val[0] == 3.0                      # latest write wins
 
 
 def test_deliver_until_reheapifies_keep_list():
-    """Partial delivery (one target of several) must leave _events a valid
-    heap so later heappushes keep working."""
-    import heapq
+    """A time-bounded partial delivery must leave the node's queue a valid
+    heap (so later heappushes keep working) and must not touch any OTHER
+    node's queue."""
     c = _cluster()
     c.deploy(get_function("wf_set"), ["edge", "edge2", "cloud"],
              policy=ReplicationPolicy.REPLICATED)
     for i, t in enumerate((0.0, 50.0, 100.0, 150.0)):
         c.invoke("wf_set", "edge", np.full(4, float(i), np.float32),
                  t_send=t)
-    assert len(c._events) == 8               # 4 writes x 2 peers
-    c._events = list(reversed(sorted(c._events)))    # worst-case scramble
-    c._deliver_until("edge2", float("inf"))
-    assert len(c._events) == 4               # cloud's deliveries kept
-    assert _heap_ok(c._events)
+    q = c._queues["edge2"]
+    assert len(q.heap) == 4                  # 4 writes, per-node queue
+    assert len(c._queues["cloud"].heap) == 4
+    q.heap = list(reversed(sorted(q.heap)))  # worst-case scramble
+    cutoff = sorted(ev[0] for ev in q.heap)[1]       # two of four due
+    c._deliver_until("edge2", cutoff)
+    assert len(q.heap) == 2                  # later deliveries kept...
+    assert _heap_ok(q.heap)                  # ...as a valid heap
+    assert len(c._queues["cloud"].heap) == 4          # other node untouched
     # and the heap keeps absorbing new events correctly
     c.invoke("wf_set", "edge", np.full(4, 9.0, np.float32), t_send=200.0)
-    assert _heap_ok(c._events)
+    assert _heap_ok(q.heap)
+    c.flush_replication()
+    assert c.pending_replication() == []
+    assert (store_contents(c.nodes["edge2"].stores["wfsetkg"])
+            == store_contents(c.nodes["edge"].stores["wfsetkg"]))
