@@ -1,7 +1,10 @@
-"""Shared benchmark plumbing: cluster builders, workload drivers, tables."""
+"""Shared benchmark plumbing: cluster builders, workload drivers, tables,
+and the stabilized measurement methodology (warmup + interleaved repeats +
+median-of-K) that makes wall-clock numbers regressable on a noisy host."""
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Dict, List, Optional
 
 import jax.numpy as jnp
@@ -27,6 +30,45 @@ def open_workload(invoke: Callable[[float, int], object], rps: float,
         t_send = i * (1000.0 / rps)
         results.append(invoke(t_send, i))
     return results
+
+
+def interleaved_repeats(variants: Dict[object, Callable[[], int]],
+                        repeats: int = 3, warmup: int = 1
+                        ) -> Dict[object, List[float]]:
+    """Measure competing variants FAIRLY under drifting host load.
+
+    ``variants`` maps a label to a zero-arg callable that runs one full
+    measurement pass and returns the number of operations it completed.
+    The methodology (the fix for the ~4x run-to-run spread the ROADMAP
+    flagged on ``parallel_sweep``):
+
+    * ``warmup`` un-recorded rounds first — jit compiles, allocator and
+      cache warm-up land outside the timed region;
+    * then ``repeats`` recorded rounds, each visiting EVERY variant once
+      (interleaving): slow host-load drift hits all variants equally
+      instead of whichever happened to run last;
+    * the caller reduces with ``median_ops`` — the median of K is robust
+      to one descheduled run, where a mean is not.
+
+    Returns ``{label: [ops_per_s, ...]}`` with ``repeats`` samples each.
+    """
+    labels = list(variants)
+    for _ in range(max(0, warmup)):
+        for lb in labels:
+            variants[lb]()
+    samples: Dict[object, List[float]] = {lb: [] for lb in labels}
+    for _ in range(repeats):
+        for lb in labels:
+            t0 = time.perf_counter()
+            ops = variants[lb]()
+            elapsed = time.perf_counter() - t0
+            samples[lb].append(ops / elapsed)
+    return samples
+
+
+def median_ops(samples: Dict[object, List[float]]) -> Dict[object, float]:
+    """Median ops/s per variant (the number a regression asserts on)."""
+    return {lb: float(np.median(v)) for lb, v in samples.items()}
 
 
 def latency_stats(results, name: str = "") -> Dict[str, float]:

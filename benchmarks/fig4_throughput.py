@@ -53,6 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import interleaved_repeats, median_ops
 from repro.core import Cluster, enoki_function, get_function
 from repro.core.network import paper_topology
 from repro.core.store import kv_get, kv_set, store_new
@@ -430,29 +431,33 @@ def run_parallel_sweep(window_ms: float = PARALLEL_WINDOW_MS,
     spacing = 1.0 / (rate_per_ms * len(nodes))   # global inter-arrival (ms)
     stream = [("fig4_par_read", "edge") if i % 2 == 0
               else ("fig4_par_write", "edge2") for i in range(n_requests)]
-    # interleave the serial/parallel repeats so drifting host load hits
-    # both equally; report the median of each
-    samples = {k: [] for k in workers}
-    for _ in range(3):
-        for k in workers:
+    # warmup + interleaved repeats + median-of-K (benchmarks.common): the
+    # un-recorded warmup round absorbs residual jit/allocator transients,
+    # the interleaving makes drifting host load hit serial and parallel
+    # equally, and the median shrugs off one descheduled run
+    def pump_pass(k):
+        def run_once() -> int:
             cluster.flush_replication()
             block()
             eng = BatchedInvocationEngine(cluster, window_ms=window_ms,
                                           workers=k)
             cluster.engine = eng
-            t0 = time.perf_counter()
             for i, (fn_name, nd) in enumerate(stream):
                 eng.submit(fn_name, nd, x, t_send=i * spacing)
             out = eng.pump()    # ONE cycle: both store nodes' windows
             block()
-            elapsed = time.perf_counter() - t0
             eng.close()
             assert len(out) == n_requests
-            samples[k].append(n_requests / elapsed)
+            return n_requests
+        return run_once
+
+    samples = interleaved_repeats({k: pump_pass(k) for k in workers},
+                                  repeats=3, warmup=1)
+    medians = median_ops(samples)
     for k in workers:
         rows.append({"kind": "pump", "op": "read+write", "workers": k,
                      "window_ms": window_ms,
-                     "ops_per_s": round(float(np.median(samples[k])), 1),
+                     "ops_per_s": round(medians[k], 1),
                      "runs": [round(s, 1) for s in samples[k]]})
 
     # determinism check on a read-only stream spanning BOTH store nodes
@@ -486,10 +491,10 @@ def run_parallel_sweep(window_ms: float = PARALLEL_WINDOW_MS,
     # interleaved repeats and medians, like the pump rows
     serve_clients = 32
     serve_n = min(n_requests, 256)
-    serve_samples = {k: [] for k in workers}
     serve_p99 = {k: [] for k in workers}
-    for _ in range(3):
-        for k in workers:
+
+    def serve_pass(k):
+        def run_once() -> int:
             cluster.engine = BatchedInvocationEngine(cluster)
             errors = []
 
@@ -501,7 +506,6 @@ def run_parallel_sweep(window_ms: float = PARALLEL_WINDOW_MS,
                 except BaseException as e:
                     errors.append(e)
 
-            t0 = time.perf_counter()
             with FaasServer(cluster, window_ms=8.0, time_scale=50.0,
                             workers=k) as srv:
                 threads = [_threading.Thread(target=client,
@@ -511,18 +515,23 @@ def run_parallel_sweep(window_ms: float = PARALLEL_WINDOW_MS,
                     t.start()
                 for t in threads:
                     t.join()
-            elapsed = time.perf_counter() - t0
             assert not errors, errors[0]
-            serve_samples[k].append(srv.stats.served / elapsed)
             serve_p99[k].append(percentiles(srv.response_ms)[99])
             cluster.engine.close()
+            return srv.stats.served
+        return run_once
+
+    # p99 side-channel gathers one extra (warmup) sample per variant; slice
+    # the recorded tail so the reported p99 matches the recorded rounds
+    serve_samples = interleaved_repeats(
+        {k: serve_pass(k) for k in workers}, repeats=3, warmup=1)
+    serve_medians = median_ops(serve_samples)
     for k in workers:
         rows.append({"kind": "serve", "op": "read+write", "workers": k,
                      "window_ms": 8.0,
-                     "ops_per_s": round(float(np.median(serve_samples[k])),
-                                        1),
+                     "ops_per_s": round(serve_medians[k], 1),
                      "runs": [round(s, 1) for s in serve_samples[k]],
-                     "p99_ms": round(float(np.median(serve_p99[k])), 2)})
+                     "p99_ms": round(float(np.median(serve_p99[k][1:])), 2)})
     return rows
 
 

@@ -77,8 +77,201 @@ def run(rps: float = 10.0, duration_s: float = 20.0, repeats: int = 3):
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Churn mode: the replicated placement under node kill/restore per epoch.
+#
+# Two complementary measurements, both pinned by the acceptance criteria:
+#
+# * ``run_churn`` (virtual time, deterministic): an accumulator keygroup
+#   replicated edge<->edge2; each epoch kills edge2, keeps writing (half
+#   the writes deliberately target the dead node and must be REROUTED, not
+#   lost), probes a function deployed only on the dead node (those must
+#   FAIL FAST as at-most-once drops, not hang), then restores edge2
+#   through the membership catch-up.  Accounting must balance exactly —
+#   submitted == served + failed_fast, zero silently lost — and the final
+#   store state must be byte-identical (``stores_equal``: version vectors
+#   AND contents) to a churn-free run of the same write sequence.
+#
+# * ``run_churn_serving`` (wall clock): the same kill/restore cadence
+#   against a live ``FaasServer``; clients retry on ``RequestLost`` until
+#   served, so the final accumulator value doubles as an at-most-once
+#   audit (a "lost" request that had secretly applied would overshoot).
+# ---------------------------------------------------------------------------
+
+def _ensure_churn_fns():
+    if "churn_acc" in registry():
+        return
+
+    @enoki_function(name="churn_acc", keygroups=["churnkg"], codec_width=4)
+    def churn_acc(kv, x):
+        cur, _ = kv.get("acc")
+        kv.set("acc", cur + jnp.atleast_1d(x)[:1])
+        return cur[:1] + jnp.atleast_1d(x)[:1]
+
+    @enoki_function(name="churn_probe", keygroups=["churnprobekg"],
+                    codec_width=4)
+    def churn_probe(kv, x):
+        return jnp.atleast_1d(x)[:1]
+
+
+def _churn_cluster():
+    c = paper_cluster(measure_compute=False)
+    c.deploy(get_function("churn_acc"), ["edge", "edge2"],
+             policy=ReplicationPolicy.REPLICATED)
+    c.deploy(get_function("churn_probe"), ["edge2"],
+             policy=ReplicationPolicy.REPLICATED)
+    return c
+
+
+_QUIESCE_T = 1e12       # large FINITE horizon: flushes every pending
+                        # delivery but NOT the inf-arrival ones a
+                        # partition would strand
+
+
+def run_churn(epochs: int = 5, writes_per_epoch: int = 8):
+    """Kill/restore a replica per epoch under a deterministic write stream;
+    returns (rows, summary).  See the block comment above for the contract
+    each column asserts."""
+    from repro.core.engine import BatchedInvocationEngine
+    from repro.core.store import stores_equal
+    from repro.runtime import ElasticMembership, FailureInjector
+    _ensure_fns()
+    _ensure_churn_fns()
+    one = jnp.ones((1,), jnp.float32)
+    total = epochs * writes_per_epoch
+
+    # churn-free reference: the identical write sequence, all applied at
+    # the writer edge, replication flushed at the same epoch boundaries
+    ref = _churn_cluster()
+    ref_eng = BatchedInvocationEngine(ref, window_ms=4.0)
+    ref.engine = ref_eng
+    for e in range(epochs):
+        for i in range(writes_per_epoch):
+            g = e * writes_per_epoch + i
+            ref_eng.submit("churn_acc", "edge", one, t_send=g * 10.0)
+        ref_eng.flush()
+        ref.flush_replication(_QUIESCE_T)
+    ref_eng.close()
+
+    # churn run: same sequence, but edge2 is DEAD for every epoch's writes
+    # (half of them aimed straight at it) and restored afterwards
+    c = _churn_cluster()
+    eng = BatchedInvocationEngine(c, window_ms=4.0)
+    c.engine = eng
+    m = ElasticMembership(c, min_replicas=2)
+    inj = FailureInjector(c, membership=m)
+    rows = []
+    served = 0
+    n_probe = 2
+    for e in range(epochs):
+        inj.kill_node("edge2")
+        prev_re, prev_dd = eng.stats.reroutes, eng.stats.dropped_dead
+        for i in range(writes_per_epoch):
+            g = e * writes_per_epoch + i
+            # odd writes target the DEAD node: the engine must reroute
+            # them to the surviving replica, not raise or hang
+            node = "edge2" if i % 2 else "edge"
+            eng.submit("churn_acc", node, one, t_send=g * 10.0)
+        for p in range(n_probe):
+            # deployed only on the dead node -> at-most-once fail-fast
+            eng.submit("churn_probe", "edge2", one,
+                       t_send=(e * writes_per_epoch + writes_per_epoch)
+                       * 10.0 + p)
+        out = eng.flush()
+        assert not eng.pending(), "requests left hanging after flush"
+        served += len(out)
+        inj.restore_node("edge2", t=_QUIESCE_T)
+        c.flush_replication(_QUIESCE_T)
+        rows.append({"epoch": e, "submitted": writes_per_epoch + n_probe,
+                     "served": len(out),
+                     "rerouted": eng.stats.reroutes - prev_re,
+                     "failed_fast": eng.stats.dropped_dead - prev_dd})
+    eng.close()
+
+    silently_lost = (total + epochs * 2) - served - eng.stats.dropped_dead
+    state_ok = all(
+        stores_equal(c.store_of("churnkg", nd), ref.store_of("churnkg", nd))
+        for nd in ("edge", "edge2"))
+    summary = {
+        "submitted": total + epochs * 2, "served": served,
+        "rerouted": eng.stats.reroutes,
+        "failed_fast": eng.stats.dropped_dead,
+        "silently_lost": silently_lost,
+        "crashes": m.stats.crashes, "restores": m.stats.restores,
+        "state_matches_churn_free": state_ok,
+    }
+    return rows, summary
+
+
+def run_churn_serving(epochs: int = 3, writes_per_epoch: int = 16,
+                      time_scale: float = 50.0):
+    """Wall-clock churn: kill/restore a replica while a live FaasServer
+    drains retrying clients.  Every drop must surface as ``RequestLost``
+    (counted, retried); the final accumulator value audits at-most-once."""
+    from repro.core.engine import BatchedInvocationEngine
+    from repro.launch.faas_server import FaasServer, RequestLost
+    from repro.runtime import ElasticMembership, FailureInjector
+    _ensure_fns()
+    _ensure_churn_fns()
+    one = jnp.ones((1,), jnp.float32)
+    c = _churn_cluster()
+    c.engine = BatchedInvocationEngine(c, window_ms=4.0)
+    m = ElasticMembership(c, min_replicas=2)
+    inj = FailureInjector(c, membership=m)
+    lost = retried = served = 0
+    unexpected = []
+    with FaasServer(c, window_ms=4.0, time_scale=time_scale,
+                    membership=m) as srv:
+        for e in range(epochs):
+            for i in range(writes_per_epoch):
+                if i == writes_per_epoch // 4:
+                    inj.kill_node("edge2")
+                elif i == (3 * writes_per_epoch) // 4:
+                    inj.restore_node("edge2", t=_QUIESCE_T)
+                while True:     # retry until served: RequestLost is the
+                    try:        # at-most-once signal to re-submit
+                        srv.submit("churn_acc", one).result(timeout=30.0)
+                        served += 1
+                        break
+                    except RequestLost:
+                        lost += 1
+                        retried += 1
+                    except BaseException as exc:    # anything else is a
+                        unexpected.append(exc)      # silent-loss bug
+                        break
+            if m.state.get("edge2") != "alive":
+                inj.restore_node("edge2", t=_QUIESCE_T)
+    c.flush_replication(_QUIESCE_T)
+    final = float(np.asarray(
+        c.invoke("churn_acc", "edge", jnp.zeros((1,), jnp.float32),
+                 t_send=1e9).output)[0])
+    c.engine.close()
+    total = epochs * writes_per_epoch
+    return {
+        "submitted": total + retried, "served": served,
+        "request_lost": lost, "retried": retried,
+        "unexpected_errors": len(unexpected),
+        # served writes each add 1; the final read sees the accumulated
+        # value BEFORE its own (zero) add — equality proves no lost
+        # request ever secretly applied (at-most-once held)
+        "final_value": final, "expected_value": float(total),
+        "at_most_once_held": final == float(total),
+    }
+
+
 def main():
+    import sys
     from benchmarks.common import print_table
+    if "--churn" in sys.argv:
+        rows, summary = run_churn()
+        print_table(rows, "Fig 6 churn — kill/restore a replica per epoch")
+        print_table([summary], "Fig 6 churn — totals")
+        serve = run_churn_serving()
+        print_table([serve], "Fig 6 churn — wall-clock serving loop")
+        assert summary["silently_lost"] == 0, summary
+        assert summary["state_matches_churn_free"], summary
+        assert serve["unexpected_errors"] == 0 and serve["at_most_once_held"]
+        return rows
     rows = run()
     print_table(rows, "Fig 6 — placement vs latency and staleness")
     print("\npaper: local writes ≈50ms faster than cloud; local reads "

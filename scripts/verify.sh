@@ -49,4 +49,47 @@ assert srv.stats.served == 32 and srv.stats.lost == 0
 print(f"server smoke OK: {srv.stats.served} served "
       f"({srv.stats.pumps} pumps, workers=2, thread + asyncio clients)")
 EOF
+
+# Crash-recovery smoke: kill one node of a 2-node FaasServer mid-serving —
+# the drain completes (nothing hangs), rerouted work lands at the
+# survivor, and any dropped ticket raises RequestLost (at-most-once).
+python - <<'EOF'
+import numpy as np
+from repro.core import Cluster, enoki_function, get_function
+from repro.launch.faas_server import FaasServer, RequestLost
+from repro.runtime import ElasticMembership, FailureInjector
+
+@enoki_function(name="vy_crash_acc", keygroups=["vycrkg"], codec_width=8)
+def vy_crash_acc(kv, x):
+    cur, found = kv.get("total")
+    kv.set("total", cur + x)
+    return cur[:1] + x[:1]
+
+c = Cluster({"edge": "edge", "edge2": "edge", "cloud": "cloud"},
+            measure_compute=False)
+c.deploy(get_function("vy_crash_acc"), ["edge", "edge2"])
+m = ElasticMembership(c)
+inj = FailureInjector(c, membership=m)
+x = np.ones(8, np.float32)
+for b in (1, 8, 64):
+    c.invoke_batch("vy_crash_acc", "edge", [x] * b)  # warm jit buckets
+c.flush_replication()
+
+with FaasServer(c, window_ms=5.0, time_scale=200.0, membership=m) as srv:
+    futs = [srv.submit("vy_crash_acc", x) for _ in range(16)]
+    inj.kill_node("edge2")              # mid-serving crash
+    served = lost = 0
+    for f in futs:
+        try:
+            f.result(timeout=30.0)      # bounded: drain must complete
+            served += 1
+        except RequestLost:
+            lost += 1
+assert served + lost == 16, (served, lost)
+assert srv.stats.served == served and srv.stats.lost == lost
+assert m.state["edge2"] == "dead" and m.stats.crashes == 1
+assert not srv._futures and not srv._orphans
+print(f"crash smoke OK: {served} served, {lost} failed fast "
+      f"(edge2 killed mid-serving, survivor absorbed the rest)")
+EOF
 echo "verify OK"

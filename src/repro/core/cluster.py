@@ -231,6 +231,8 @@ class Cluster:
                 heapq.heapify(keep)
                 q.heap = keep
             for arrival, _, kg, snapshot in sorted(due, key=lambda e: e[:2]):
+                if kg not in nd.stores:
+                    continue    # replica crashed away mid-flight: stale
                 nd.stores[kg] = merge_stores_jit(nd.stores[kg], snapshot)
 
     def _schedule_replication(self, kg: str, source: str, t_apply: float) -> None:
@@ -241,9 +243,11 @@ class Cluster:
             snapshot = self.nodes[source].stores[kg]
         nbytes = sum(int(np.prod(x.shape)) * x.dtype.itemsize
                      for x in snapshot[:4])
+        alive = set(self.naming.alive_nodes())
         for peer in self.naming.replicas_of(kg):
-            if peer == source:
-                continue
+            if peer == source or peer not in alive:
+                continue    # a dead replica receives nothing; a restore
+                            # re-syncs it from a live peer snapshot instead
             arrival = t_apply + self.net.one_way_ms(source, peer)
             q = self._queues[peer]
             with q.lock:
@@ -251,6 +255,30 @@ class Cluster:
                                (arrival, next(self._seq), kg, snapshot))
             with self._repl_lock:
                 self.replication_bytes += nbytes
+
+    def drop_pending_deliveries(self, node: str) -> int:
+        """Discard every undelivered replication event addressed to
+        ``node`` (a crashed replica loses what was still on the wire TO it;
+        events already scheduled at its peers are unaffected).  Returns the
+        number of dropped events."""
+        q = self._queues[node]
+        with q.lock:
+            n = len(q.heap)
+            q.heap = []
+        return n
+
+    def add_node(self, name: str, kind: str = "edge") -> None:
+        """Register a NEW node at runtime (elastic join).  The node starts
+        with no stores or handlers — membership catch-up replicates
+        keygroups and deploys handlers before it serves (runtime/elastic)."""
+        if name in self.nodes:
+            raise ValueError(f"node {name!r} already exists")
+        node_id = max(nd.node_id for nd in self.nodes.values()) + 1
+        if node_id >= MAX_NODES:
+            raise ValueError(f"cluster is at MAX_NODES={MAX_NODES}")
+        self.nodes[name] = _Node(name=name, kind=kind, node_id=node_id)
+        self._queues[name] = _DeliveryQueue()
+        self.naming.register_node(name, kind)
 
     def pending_replication(self, node: Optional[str] = None
                             ) -> List[Tuple[float, str, str]]:
@@ -426,9 +454,14 @@ class Cluster:
         raise KeyError(f"{fn_name} not deployed anywhere")
 
     def _nearest_deployment(self, fn_name: str, from_node: str) -> str:
-        nodes = self.naming.deployments_of(fn_name)
+        """Nearest LIVE deployment — dead nodes never receive new work, so
+        a downstream wave whose usual target crashed fails over to the
+        nearest surviving replica instead of dispatching into the void."""
+        alive = set(self.naming.alive_nodes())
+        nodes = [n for n in self.naming.deployments_of(fn_name)
+                 if n in alive and fn_name in self.nodes[n].handlers]
         if not nodes:
-            raise KeyError(f"{fn_name} not deployed anywhere")
+            raise KeyError(f"no live deployment of {fn_name}")
         return min(nodes, key=lambda n: self.net.rtt_ms(from_node, n))
 
     def set_compute_ms(self, node: str, fn_name: str, ms: float) -> None:

@@ -204,6 +204,12 @@ class EngineStats(AtomicStats):
                                     # merged across >1 caller frame
     replication_coalesced: int = 0  # per-group snapshots saved by cycle
                                     # coalescing
+    reroutes: int = 0               # requests moved off a dead node to a
+                                    # surviving deployment (queued windows
+                                    # at eviction + frames at dispatch)
+    dropped_dead: int = 0           # requests dropped because NO live
+                                    # deployment remained (fail-fast under
+                                    # the at-most-once contract)
 
 
 class _NodePool:
@@ -457,6 +463,51 @@ class BatchedInvocationEngine:
                         return True
         return False
 
+    def _evict_dead(self) -> Tuple[int, int]:
+        """Sweep queued windows targeting DEAD nodes (health-driven removal
+        or an injected crash) and convert each pending request into either a
+        rerouted window at the nearest surviving deployment or a fail-fast
+        drop when no live deployment remains.  Returns ``(rerouted,
+        dropped)``.
+
+        Called at the top of every ``pump``/``flush`` — before
+        ``_validate`` — so a crashed node never hangs the serving thread:
+        rerouted requests keep their tickets (they re-enter the window
+        queue with a recomputed arrival at the new target and flush on a
+        later turn), dropped tickets simply vanish from ``pending()``,
+        which is exactly what ``Router._fold`` / ``FaasServer.reconcile``
+        read to surface ``RequestLost``.  Only liveness triggers eviction;
+        an undeployed function on a LIVE node still raises the usual
+        ``_validate`` KeyError with the queue left intact."""
+        c = self.cluster
+        rerouted = dropped = 0
+        with self._qlock:
+            dead = [w for w in self._windows
+                    if w.key[1] in c.nodes
+                    and not c.naming.is_alive(w.key[1])]
+            if not dead:
+                return (0, 0)
+            self._windows = [w for w in self._windows if w not in dead]
+            for w in dead:
+                for p in w.ps:
+                    try:
+                        alt = c._nearest_deployment(p.fn, p.client)
+                    except KeyError:
+                        dropped += 1        # no live deployment: fail fast
+                        continue
+                    p.node = alt
+                    p.t_arrive = p.t_send + self._hop_ms(
+                        p.client, alt, p.payload_bytes)
+                    w2 = self._open_window(
+                        (p.fn, alt, p.client, p.payload_bytes), p.t_arrive)
+                    w2.ps.append(p)
+                    rerouted += 1
+        if rerouted:
+            self.stats.inc("reroutes", rerouted)
+        if dropped:
+            self.stats.inc("dropped_dead", dropped)
+        return (rerouted, dropped)
+
     def _validate(self, windows: Sequence[_Window]) -> None:
         for w in windows:
             for p in w.ps:
@@ -479,6 +530,7 @@ class BatchedInvocationEngine:
         rather than submission order (the usual trade of a coalescing
         server).  Callers needing strict cross-function ordering should
         flush between submissions."""
+        self._evict_dead()
         with self._qlock:
             self._validate(self._windows)
             windows, self._windows = self._windows, []
@@ -504,6 +556,7 @@ class BatchedInvocationEngine:
         (``until_t = inf``, the pre-clock behaviour)."""
         if until_t is None:
             until_t = self.now()
+        self._evict_dead()
         with self._qlock:
             due = [w for w in self._windows if w.deadline <= until_t]
             self._validate(due)     # raises with the queue left intact
@@ -858,9 +911,19 @@ class BatchedInvocationEngine:
                 f"{fn_name!r} — cycle in calls/async_calls?")
         c = self.cluster
         spec = c.specs[fn_name]
+        n = len(xs)
+        if node in c.nodes and not c.naming.is_alive(node):
+            # the target died between collection and dispatch (a pool job
+            # racing an injected crash): convert to a rerouted frame at the
+            # nearest surviving deployment — nothing of this chunk has
+            # committed yet, so retrying elsewhere keeps at-most-once.  No
+            # survivor -> KeyError, and the group drops under the cycle's
+            # normal failure path (tickets vanish; the server fails them
+            # fast as RequestLost)
+            node = c._nearest_deployment(fn_name, client)
+            self.stats.inc("reroutes", n)
         nd = c.nodes[node]
         bhandler = nd.batched_handlers[fn_name]
-        n = len(xs)
         self.stats.inc("dispatches")
 
         hop_ms = self._hop_ms(client, node, payload_bytes)

@@ -50,6 +50,20 @@ class NamingService:
             if name in self._nodes:
                 self._nodes[name]["alive"] = False
 
+    def mark_alive(self, name: str) -> None:
+        """Re-admit a node (rejoin after crash/leave).  Callers must have
+        caught the node's keygroups up FIRST (see runtime/elastic.py):
+        liveness is what the router's candidate filter reads, so flipping
+        it early would serve stale reads."""
+        with self._lock:
+            if name in self._nodes:
+                self._nodes[name]["alive"] = True
+
+    def is_alive(self, name: str) -> bool:
+        with self._lock:
+            m = self._nodes.get(name)
+            return bool(m and m["alive"])
+
     def alive_nodes(self) -> List[str]:
         with self._lock:
             return [n for n, m in self._nodes.items() if m["alive"]]
@@ -97,6 +111,12 @@ class NamingService:
     def add_deployment(self, fn_name: str, node: str) -> None:
         with self._lock:
             self._functions[fn_name].deployed_to.add(node)
+
+    def remove_deployment(self, fn_name: str, node: str) -> None:
+        with self._lock:
+            rec = self._functions.get(fn_name)
+            if rec is not None:
+                rec.deployed_to.discard(node)
 
     def deployments_of(self, fn_name: str) -> Set[str]:
         rec = self._functions.get(fn_name)

@@ -67,6 +67,8 @@ class RouterStats(AtomicStats):
     hedge_wins: int = 0
     hedges_suppressed: int = 0      # mutating handler: hedge would double-write
     redirects_for_consistency: int = 0
+    offloads: int = 0               # picks redirected off a saturated node
+                                    # by the local-decision offload policy
     # per-replica EWMA of client-observed completion latency (ms) — the
     # hedge-target policy's signal; see observe_latency
     ewma_ms: Dict[str, float] = dataclasses.field(default_factory=dict)
@@ -110,10 +112,17 @@ class Router:
     EWMA_ALPHA = 0.2
 
     def __init__(self, cluster: Cluster, client: str = "client",
-                 hedge_after_ms: Optional[float] = None):
+                 hedge_after_ms: Optional[float] = None,
+                 offload_ewma_ms: Optional[float] = None):
         self.cluster = cluster
         self.client = client
         self.hedge_after_ms = hedge_after_ms
+        # local-decision offload threshold (Cicconetti et al.,
+        # arXiv:2203.06385): a pick whose target's latency EWMA exceeds
+        # this redirects to the fastest-answering other replica — edge
+        # overflow drains to cloud replicas with no central coordinator,
+        # because the signal is the client's own completion observations
+        self.offload_ewma_ms = offload_ewma_ms
         self.stats = RouterStats()
         self.sessions: Dict[str, Session] = {}
         # engine tickets in flight through this router (primary tickets only)
@@ -140,17 +149,46 @@ class Router:
         cands = self.candidates(fn_name)
         if not cands:
             raise KeyError(f"no live deployment of {fn_name}")
-        if session is not None:
-            spec = self.cluster.specs[fn_name]
-            if spec.keygroups:
-                for n in cands:
-                    if self._satisfies(spec, n, session):
-                        if n != cands[0]:
-                            self.stats.inc("redirects_for_consistency")
-                        return n
-                # nobody satisfies yet -> nearest replica; caller may retry
-                return cands[0]
-        return cands[0]
+        spec = self.cluster.specs[fn_name]
+        chosen = cands[0]
+        if session is not None and spec.keygroups:
+            for n in cands:
+                if self._satisfies(spec, n, session):
+                    if n != cands[0]:
+                        self.stats.inc("redirects_for_consistency")
+                    chosen = n
+                    break
+            # nobody satisfies yet -> nearest replica; caller may retry
+        return self._maybe_offload(chosen, cands, spec, session)
+
+    def _maybe_offload(self, chosen: str, cands: List[str], spec,
+                       session: Optional[Session]) -> str:
+        """Local-decision offload: if the chosen node's completion-latency
+        EWMA says it is saturated (above ``offload_ewma_ms``), redirect to
+        the fastest-answering OTHER candidate that still satisfies the
+        session — unsampled replicas count as fast (give them a first
+        request rather than pile onto a known-slow node).  The decision is
+        purely client-local, made from this router's own observations."""
+        if self.offload_ewma_ms is None:
+            return chosen
+        ewma = self.stats.ewma_ms
+        cur = ewma.get(chosen)
+        if cur is None or cur <= self.offload_ewma_ms:
+            return chosen
+        best, best_ms = None, cur
+        for n in cands:
+            if n == chosen:
+                continue
+            if (session is not None and spec.keygroups
+                    and not self._satisfies(spec, n, session)):
+                continue
+            ms = ewma.get(n, 0.0)
+            if ms < best_ms:
+                best, best_ms = n, ms
+        if best is None:
+            return chosen           # everyone else is as slow or stale
+        self.stats.inc("offloads")
+        return best
 
     def _satisfies(self, spec, node: str, session: Session) -> bool:
         """Whether serving ``spec`` at ``node`` can satisfy the session.

@@ -82,6 +82,7 @@ class ServerStats(AtomicStats):
     pumps: int = 0                  # pump passes that delivered results
     wakeups: int = 0                # loop iterations (submits + deadlines)
     cycle_errors: int = 0           # exceptions a flush cycle raised
+    nodes_crashed: int = 0          # membership polls that took a node dark
 
 
 class FaasServer:
@@ -92,7 +93,9 @@ class FaasServer:
                  max_batch: Optional[int] = None,
                  hedge_after_ms: Optional[float] = None,
                  client: str = "client", time_scale: float = 1.0,
-                 workers: Optional[int] = None):
+                 workers: Optional[int] = None,
+                 membership=None, health_poll_ms: float = 50.0,
+                 offload_ewma_ms: Optional[float] = None):
         if time_scale <= 0:
             raise ValueError("time_scale must be > 0")
         if window_ms is None or not math.isfinite(window_ms) or window_ms < 0:
@@ -102,7 +105,16 @@ class FaasServer:
             raise ValueError("FaasServer requires a finite window_ms >= 0")
         self.cluster = cluster
         self.router = Router(cluster, client=client,
-                             hedge_after_ms=hedge_after_ms)
+                             hedge_after_ms=hedge_after_ms,
+                             offload_ewma_ms=offload_ewma_ms)
+        # optional ElasticMembership (runtime/elastic.py): the serving loop
+        # polls it every turn — a health-reported death crashes the node
+        # through the recovery state machine, the next pump's dead-node
+        # eviction reroutes or fail-fasts its queued tickets, and the
+        # loop's sleeps are CAPPED at health_poll_ms (virtual) so a quiet
+        # server still notices a silent node within one poll interval
+        self.membership = membership
+        self.health_poll_ms = health_poll_ms
         self.time_scale = time_scale
         self.stats = ServerStats()
         self.response_ms: List[float] = []      # virtual latency per serve
@@ -311,6 +323,13 @@ class FaasServer:
                     return
                 self.stats.inc("wakeups")
                 gen0 = self._submit_gen
+            if self.membership is not None:
+                # health plane first: a node that timed out crashes NOW,
+                # so this very turn's pump evicts its queued windows
+                # (reroute or fail-fast) instead of dispatching into it
+                crashed = self.membership.poll()
+                if crashed:
+                    self.stats.inc("nodes_crashed", len(crashed))
             # one pump TURN under the pump lock (fold -> deliver -> fail
             # lost stays atomic against the submit error path), OUTSIDE
             # the server lock: submits stay non-blocking while the engine
@@ -338,11 +357,17 @@ class FaasServer:
                     # flush) and its notify found no waiter — pump again
                     # instead of arming a sleep that nothing would wake
                     continue
+                # with a membership attached, never sleep past one health
+                # poll interval — a dead node produces no submit to wake us
+                cap = (self._to_wall_s(self.health_poll_ms)
+                       if self.membership is not None else None)
                 nxt = self.router.next_deadline()
                 if nxt is None:
-                    self._cond.wait()           # until a submit or stop
+                    self._cond.wait(timeout=cap)    # submit, stop, or poll
                     continue
                 delay = self._to_wall_s(nxt - self.now())
+                if cap is not None:
+                    delay = min(delay, cap)
                 if delay > 0:
                     # sleep EXACTLY until the next window close/hedge fire;
                     # a submit notifies and the loop re-arms

@@ -1,7 +1,8 @@
-from repro.runtime.elastic import degraded_mesh_config, remesh
+from repro.runtime.elastic import (ElasticMembership, MembershipStats,
+                                   degraded_mesh_config, remesh)
 from repro.runtime.failure import FailureInjector
 from repro.runtime.health import HealthMonitor
 from repro.runtime.straggler import StragglerPolicy
 
-__all__ = ["degraded_mesh_config", "remesh", "FailureInjector",
-           "HealthMonitor", "StragglerPolicy"]
+__all__ = ["ElasticMembership", "MembershipStats", "degraded_mesh_config",
+           "remesh", "FailureInjector", "HealthMonitor", "StragglerPolicy"]

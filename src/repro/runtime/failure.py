@@ -18,11 +18,31 @@ from repro.core.network import Link
 @dataclasses.dataclass
 class FailureInjector:
     cluster: Cluster
+    #: optional ElasticMembership (runtime/elastic.py) — when set, kills
+    #: route through the full recovery state machine (keygroup rebalance,
+    #: checkpoint fallback, delivery-queue drop) instead of the bare
+    #: liveness flip, and ``restore_node`` becomes available
+    membership: Optional[object] = None
 
     def kill_node(self, node: str) -> None:
-        """Mark dead + drop its handlers: requests must fail over."""
+        """Mark dead + drop its handlers: requests must fail over.  With a
+        membership attached this is a full crash (rebalance + drop of
+        on-the-wire deliveries); bare injectors keep the historical
+        minimal kill."""
+        if self.membership is not None:
+            self.membership.crash(node)
+            return
         self.cluster.naming.mark_dead(node)
         self.cluster.nodes[node].handlers.clear()
+        self.cluster.nodes[node].batched_handlers.clear()
+
+    def restore_node(self, node: str, t: float = float("inf")) -> None:
+        """Bring a killed node back through the membership's catch-up path
+        (requires ``membership``)."""
+        if self.membership is None:
+            raise RuntimeError("restore_node needs a membership "
+                               "(FailureInjector(cluster, membership=...))")
+        self.membership.restore(node, t)
 
     def lose_keygroup(self, node: str, kg: str) -> None:
         """Simulate storage loss of one replica."""

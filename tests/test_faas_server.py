@@ -398,3 +398,102 @@ def test_faas_server_lost_ticket_fails_future():
     with pytest.raises(RequestLost):
         fut.result(timeout=1.0)
     assert srv.stats.lost == 1
+
+
+def test_faas_server_node_death_mid_serving_reroutes_or_fails_fast():
+    """Kill a replica while the server is live: in-flight and queued
+    requests either complete at the survivor (rerouted) or surface as
+    RequestLost — the accounting balances exactly and nothing hangs."""
+    from repro.launch.faas_server import FaasServer, RequestLost
+    from repro.runtime import ElasticMembership, FailureInjector
+    c = _cluster()
+    _deploy_both(c)
+    m = ElasticMembership(c)
+    inj = FailureInjector(c, membership=m)
+    for b in (1, 8, 64):
+        c.invoke_batch("fs_bump", "edge", [_x()] * b)
+    n = 16
+    t0 = time.perf_counter()
+    with FaasServer(c, window_ms=5.0, time_scale=200.0,
+                    membership=m) as srv:
+        futs = [srv.submit("fs_bump", _x()) for _ in range(n)]
+        inj.kill_node("edge2")          # mid-serving: windows may target it
+        served = lost = 0
+        for f in futs:
+            try:
+                f.result(timeout=30.0)
+                served += 1
+            except RequestLost:
+                lost += 1
+    assert time.perf_counter() - t0 < 30.0          # bounded, no hang
+    assert all(f.done() for f in futs)
+    assert served + lost == n                       # at-most-once balances
+    assert srv.stats.served == served and srv.stats.lost == lost
+    # both replicas were deployed, so the survivor absorbs the work
+    assert served == n and lost == 0
+    c.flush_replication(1e12)
+    assert m.state["edge2"] == "dead"
+
+
+def test_faas_server_submit_stop_race_under_injected_death():
+    """Regression for the submit-vs-stop race crossed with node death:
+    client threads hammer submit (auto-flush via max_batch=1) while the
+    main thread kills a node and then stops the server.  Every future a
+    client obtained must SETTLE — resolved, RequestLost, or the explicit
+    stopping-server failure — and the orphan buffer must be empty (no
+    result stranded without its future)."""
+    import threading
+    from repro.launch.faas_server import FaasServer, RequestLost
+    from repro.runtime import ElasticMembership, FailureInjector
+    c = _cluster()
+    _deploy_both(c)
+    m = ElasticMembership(c)
+    inj = FailureInjector(c, membership=m)
+    for b in (1, 8):
+        c.invoke_batch("fs_bump", "edge", [_x()] * b)
+    srv = FaasServer(c, window_ms=5.0, time_scale=200.0, max_batch=1,
+                     membership=m).start()
+    futs, submit_refused = [], []
+    flock = threading.Lock()
+    stop_submitting = threading.Event()
+
+    def client():
+        while not stop_submitting.is_set():
+            try:
+                f = srv.submit("fs_bump", _x())
+            except RuntimeError:        # raced past stop(): fail-fast path
+                submit_refused.append(1)
+                return
+            except Exception:
+                # a cycle the kill broke can raise out of the auto-flush
+                # inside submit; the server reconciles before re-raising
+                continue
+            with flock:
+                futs.append(f)
+
+    threads = [threading.Thread(target=client) for _ in range(4)]
+    for t in threads:
+        t.start()
+    time.sleep(0.05)
+    inj.kill_node("edge2")
+    time.sleep(0.05)
+    stop_submitting.set()
+    srv.stop(drain=True)
+    for t in threads:
+        t.join(timeout=10.0)
+    assert not any(t.is_alive() for t in threads)
+    served = lost = 0
+    for f in futs:
+        assert f.done()                 # drain settles every future
+        try:
+            f.result(timeout=0.0)
+            served += 1
+        except (RequestLost, RuntimeError):
+            lost += 1
+    assert served + lost == len(futs)
+    # server-side accounting agrees with the client-side settlement;
+    # RuntimeError-settled futures were counted lost by the server too
+    assert srv.stats.submitted == len(futs)
+    assert srv.stats.served == served
+    assert not srv._orphans              # no result stranded futureless
+    assert not srv._futures              # no future left unresolved

@@ -1,11 +1,15 @@
 """Correctness of the §Perf optimized paths vs their baselines (subprocess:
-needs >1 host device for the shard_map meshes)."""
+needs >1 host device for the shard_map meshes), plus the stabilized
+wall-clock throughput regression for the batched invocation path."""
 import os
+import pathlib
 import subprocess
 import sys
 import textwrap
 
 import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
 SCRIPT = textwrap.dedent("""
     import os
@@ -72,6 +76,62 @@ SCRIPT = textwrap.dedent("""
         assert err < 1e-4, f"{name}: {err}"
     print("ATTENTION_VARIANTS_OK")
 """)
+
+
+def test_batched_invoke_throughput_regression():
+    """The §4.2 hot-path claim, asserted against a STABILIZED baseline:
+    one fused ``invoke_batch`` dispatch must beat N sequential ``invoke``
+    round-trips by a healthy margin.  Raw single-run ratios on this host
+    spread ~4x with load (the ROADMAP's parallel_sweep complaint); the
+    warmup + interleaved-repeats + median-of-K methodology from
+    ``benchmarks.common`` shrinks that enough to pin a real bound instead
+    of the old anything-goes ``> 1.0``-style check."""
+    import jax
+    import numpy as np
+    from benchmarks.common import interleaved_repeats, median_ops
+    from repro.core import Cluster, enoki_function, get_function
+    from repro.core.faas import registry
+
+    if "perfthr_acc" not in registry():
+        @enoki_function(name="perfthr_acc", keygroups=["perfthrkg"],
+                        codec_width=8)
+        def perfthr_acc(kv, x):
+            cur, _ = kv.get("acc")
+            kv.set("acc", cur + x)
+            return cur[:1] + x[:1]
+
+    c = Cluster({"edge": "edge"}, measure_compute=False)
+    c.deploy(get_function("perfthr_acc"), ["edge"])
+    x = np.ones((8,), np.float32)
+    n = 64
+
+    def block():
+        jax.block_until_ready(c.nodes["edge"].stores["perfthrkg"])
+
+    def sequential() -> int:
+        for i in range(n):
+            c.invoke("perfthr_acc", "edge", x, t_send=float(i))
+        block()
+        return n
+
+    def batched() -> int:
+        c.invoke_batch("perfthr_acc", "edge", [x] * n)
+        block()
+        return n
+
+    samples = interleaved_repeats(
+        {"sequential": sequential, "batched": batched},
+        repeats=5, warmup=1)
+    med = median_ops(samples)
+    ratio = med["batched"] / med["sequential"]
+    # observed 10-20x on this host; 2.5x leaves room for a loaded CI
+    # worker while still catching a real regression to per-request
+    # dispatch (ratio ~1)
+    assert ratio >= 2.5, (
+        f"batched/sequential median ratio {ratio:.2f} "
+        f"(batched {med['batched']:.0f} ops/s, "
+        f"sequential {med['sequential']:.0f} ops/s, "
+        f"samples {samples})")
 
 
 @pytest.mark.slow
