@@ -356,6 +356,87 @@ def run_hedge_sweep(n_requests: int = HEDGE_REQUESTS,
 
 
 # ---------------------------------------------------------------------------
+# Straggler sweep: per-frame dataflow scheduler vs the wave barrier (PR 7)
+# ---------------------------------------------------------------------------
+
+STRAGGLER_NODES = ["edge", "edge2", "edge3"]
+STRAGGLER_ROUNDS = 16
+STRAGGLER_PER_NODE = 4
+STRAGGLER_SLEEP_MS = 25.0       # WALL-clock stall injected at edge3's
+                                # batched handler (set_compute_ms only
+                                # charges virtual time — useless here)
+
+
+@enoki_function(name="fig4_dfs", keygroups=[], codec_width=BATCH_ITEM_WIDTH)
+def fig4_dfs(kv, x):
+    """Stateless leaf: its store key is the serving node itself, so the
+    three nodes' windows ride three independent dispatch lanes."""
+    return x[:1]
+
+
+def run_straggler_sweep(rounds: int = STRAGGLER_ROUNDS,
+                        per_node: int = STRAGGLER_PER_NODE,
+                        sleep_ms: float = STRAGGLER_SLEEP_MS):
+    """WALL-clock frame-completion latency on a 3-store-node topology where
+    ONE store node (edge3) is wall-clock slow, wave barrier on vs off.
+
+    Each round submits ``per_node`` requests per node (one window per
+    lane) and pumps one flush cycle; a frame's completion instant is its
+    ``on_ready`` stamp (dataflow run) or the pump return (barrier run,
+    where nothing streams).  With the barrier the fast nodes' frames all
+    wait for edge3's sleep; with the per-frame scheduler they deliver as
+    soon as their own lane finishes.  The acceptance check: fast-node p99
+    improves >= 1.5x with the barrier retired."""
+    from repro.core import percentiles
+    rows = []
+    for barrier in (True, False):
+        cluster = Cluster({n: "edge" for n in STRAGGLER_NODES},
+                          measure_compute=False)
+        cluster.deploy(get_function("fig4_dfs"), STRAGGLER_NODES)
+        x = np.ones((BATCH_ITEM_WIDTH,), np.float32)
+        for nd in STRAGGLER_NODES:      # warm each lane's jit bucket
+            cluster.invoke_batch("fig4_dfs", nd, [x] * per_node)
+        eng = cluster.engine
+        eng.configure(window_ms=4.0)
+        eng.use_workers(4)
+        eng.min_parallel_requests = 1
+        eng.wave_barrier = barrier
+        node_obj = cluster.nodes["edge3"]
+        orig = node_obj.batched_handlers["fig4_dfs"]
+
+        def slow(*a, __orig=orig, **kw):
+            time.sleep(sleep_ms / 1e3)
+            return __orig(*a, **kw)
+
+        node_obj.batched_handlers["fig4_dfs"] = slow
+        stamps = {}
+        eng.on_ready = lambda res: stamps.update(
+            dict.fromkeys(res, time.perf_counter()))
+        fast_ms, slow_ms = [], []
+        for r in range(rounds):
+            base = float(r) * 1_000.0   # one virtual second per round
+            tks = {n: [eng.submit("fig4_dfs", n, x, t_send=base + float(i))
+                       for i in range(per_node)] for n in STRAGGLER_NODES}
+            t0 = time.perf_counter()
+            out = eng.pump(base + 999.0)
+            t_end = time.perf_counter()
+            for n, tickets in tks.items():
+                bucket = slow_ms if n == "edge3" else fast_ms
+                for t in tickets:
+                    assert (t in out) != (t in stamps), (barrier, n)
+                    bucket.append((stamps.get(t, t_end) - t0) * 1e3)
+        pf, ps = percentiles(fast_ms), percentiles(slow_ms)
+        rows.append({"wave_barrier": barrier, "sleep_ms": sleep_ms,
+                     "rounds": rounds, "per_node": per_node,
+                     "fast_p50_ms": round(pf[50], 2),
+                     "fast_p99_ms": round(pf[99], 2),
+                     "slow_p99_ms": round(ps[99], 2)})
+    rows[1]["p99_improvement_x"] = round(
+        rows[0]["fast_p99_ms"] / max(rows[1]["fast_p99_ms"], 1e-9), 2)
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # Parallel-pump sweep: the executor-per-store-node dispatch pipeline
 # ---------------------------------------------------------------------------
 
@@ -587,6 +668,7 @@ def run():
             "batch_sweep": run_batch_sweep(),
             "window_sweep": run_window_sweep(),
             "hedge_sweep": run_hedge_sweep(),
+            "straggler_sweep": run_straggler_sweep(),
             "serving_sweep": run_serving_sweep(),
             "parallel_sweep": run_parallel_sweep()}
 
@@ -620,6 +702,13 @@ def main(json_out: str = None):
               f" -> hedged {hs[True]['p99_ms']} ms "
               f"({hs[True]['hedge_wins']}/{hs[True]['hedges_fired']} "
               f"hedges won)")
+    print_table(results["straggler_sweep"],
+                "Fig 4g — wave barrier vs per-frame dataflow scheduler")
+    ss = {r["wave_barrier"]: r for r in results["straggler_sweep"]}
+    if True in ss and False in ss:
+        print(f"fast-node frame p99 (wall): barrier {ss[True]['fast_p99_ms']}"
+              f" ms -> dataflow {ss[False]['fast_p99_ms']} ms "
+              f"({ss[False]['p99_improvement_x']}x)")
     print_table(results["serving_sweep"],
                 "Fig 4e — wall-clock serving loop (open/closed arrivals)")
     print_table(results["parallel_sweep"],

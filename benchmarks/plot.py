@@ -131,6 +131,33 @@ def plot_hedge_sweep(plt, rows, path):
     plt.close(fig)
 
 
+def plot_straggler_sweep(plt, rows, path):
+    fig, ax = plt.subplots(figsize=(5.2, 3.4), dpi=150)
+    fig.patch.set_facecolor(SURFACE)
+    metrics = ["fast_p50_ms", "fast_p99_ms", "slow_p99_ms"]
+    xs = range(len(metrics))
+    width = 0.38
+    for off, (barrier, color, label) in enumerate(
+            ((True, C1, "wave barrier"), (False, C2, "per-frame dataflow"))):
+        row = next((r for r in rows if r["wave_barrier"] == barrier), None)
+        if row is None:
+            continue
+        vals = [row[m] for m in metrics]
+        bars = ax.bar([x + (off - 0.5) * (width + 0.04) for x in xs], vals,
+                      width=width, color=color, label=label, zorder=2)
+        for b, v in zip(bars, vals):        # direct labels: few bars
+            ax.text(b.get_x() + b.get_width() / 2, v, f"{v:.1f}",
+                    ha="center", va="bottom", fontsize=7, color=INK2)
+    ax.set_xticks(list(xs),
+                  [m.replace("_ms", "").replace("_", " ") for m in metrics])
+    _style(ax, "Fig 4g — frame completion vs a straggling store node",
+           "node class / percentile", "latency (ms, wall clock)")
+    ax.legend(frameon=False, fontsize=8, labelcolor=INK)
+    fig.tight_layout()
+    fig.savefig(path, facecolor=SURFACE)
+    plt.close(fig)
+
+
 def plot_parallel_sweep(plt, rows, path):
     rows = [r for r in rows if "ops_per_s" in r]    # determinism-check
     fig, ax = plt.subplots(figsize=(5.6, 3.4), dpi=150)   # rows carry none
@@ -163,6 +190,7 @@ PLOTS = (
     ("window_sweep", plot_window_sweep, "fig4c_window.png"),
     ("hedge_sweep", plot_hedge_sweep, "fig4d_hedge.png"),
     ("parallel_sweep", plot_parallel_sweep, "fig4f_parallel.png"),
+    ("straggler_sweep", plot_straggler_sweep, "fig4g_straggler.png"),
 )
 
 

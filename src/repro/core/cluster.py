@@ -322,66 +322,23 @@ class Cluster:
         return sum(per_op_ms + link.transfer_ms(nbytes) for _, nbytes in ops)
 
     def invoke(self, fn_name: str, node: str, x, t_send: float = 0.0,
-               client: str = "client", payload_bytes: int = 64,
-               _depth: int = 0) -> InvokeResult:
-        spec = self.specs[fn_name]
-        nd = self.nodes[node]
-        handler = nd.handlers[fn_name]
-        t_arrive = t_send + (self.net.one_way_ms(client, node)
-                             + self.net.link(client, node).transfer_ms(payload_bytes))
+               client: str = "client", payload_bytes: int = 64) -> InvokeResult:
+        """One-off invocation: a SINGLETON frame through the batched
+        engine's scheduler, drained synchronously.
 
-        # which store does this function's state live in? (placement)
-        kg, store_node, per_op_ms = self._resolve_placement(spec, node)
-
-        # fold in any replication that arrived before we touch the store
-        if kg is not None:
-            self._deliver_until(store_node, t_arrive)
-
-        # execute the real handler against the placed store (the node lock
-        # makes the read-dispatch-write atomic against the parallel pump)
-        if kg is not None:
-            snd = self.nodes[store_node]
-            with snd.lock:
-                store = snd.stores[kg]
-                new_store, new_clock, y, ops = handler(store, snd.clock, x)
-                snd.stores[kg] = new_store
-                snd.clock = new_clock
-        else:
-            _, _, y, ops = handler(
-                arena_new(KeygroupSpec(name="_tmp",
-                                       value_width=spec.codec_width), MAX_NODES),
-                nd.clock, x)
-
-        compute = nd.compute_ms.get(fn_name, 0.0)
-        op_net = self._op_network_ms(node, store_node, per_op_ms, ops)
-        t_applied = t_arrive + compute + op_net
-        chain = [fn_name]
-
-        # async replication of the (possibly) mutated keygroup
-        wrote = any(k in ("set", "delete") for k, _ in ops)
-        if kg is not None and wrote:
-            self._schedule_replication(kg, store_node, t_applied)
-
-        # synchronous downstream calls (fig 8 call chains)
-        t_down = t_applied
-        downstream = (self._route_downstream(spec, y)
-                      if (spec.calls or spec.async_calls) else [])
-        if downstream:
-            for callee, is_async in downstream:
-                target = self._nearest_deployment(callee, node)
-                sub = self.invoke(callee, target, y, t_send=t_down, client=node,
-                                  payload_bytes=payload_bytes, _depth=_depth + 1)
-                chain.extend(sub.chain)
-                if not is_async:
-                    t_down = sub.t_received
-        t_done = max(t_applied, t_down)
-
-        t_received = t_done + (self.net.one_way_ms(client, node)
-                               + self.net.link(client, node).transfer_ms(payload_bytes))
-        return InvokeResult(output=y, response_ms=t_received - t_send,
-                            t_sent=t_send, t_received=t_received,
-                            t_applied=t_applied, kv_ops=ops, node=node,
-                            chain=chain)
+        There is no separate sequential pipeline any more — the engine's
+        flush cycle (store fold, per-request virtual timeline, coalesced
+        replication snapshot, downstream call chains, dead-node reroute)
+        is the one implementation both paths share, so every stat,
+        eviction rule and hedging hook applies identically whether a
+        request arrives alone or in a window.  A singleton cycle charges
+        the exact same network/compute timeline the old inline path did
+        (the engine's latency-parity tests pin this); ``output`` holds a
+        host numpy row like ``invoke_batch``'s results do."""
+        [res] = self.engine.dispatch(fn_name, node, [x], [t_send],
+                                     client=client,
+                                     payload_bytes=payload_bytes)
+        return res
 
     def invoke_batch(self, fn_name: str, node: str, xs,
                      t_sends: Optional[List[float]] = None,
@@ -404,22 +361,11 @@ class Cluster:
         the replication-coalescing trade-off).  Returns per-request
         InvokeResults in input order;
         ``output`` holds host numpy rows (the batch is materialised once),
-        unlike ``invoke``'s lazy device arrays.
+        exactly like ``invoke``'s singleton frames.
         """
         return self.engine.dispatch(fn_name, node, xs, t_sends,
                                     client=client,
                                     payload_bytes=payload_bytes)
-
-    def _route_downstream(self, spec: FunctionSpec, y) -> List[Tuple[str, bool]]:
-        """Which downstream calls fire, given the handler output.
-
-        Convention for composed apps: a handler returning a vector whose first
-        element is < 0 suppresses synchronous downstream calls (the 'filtered'
-        branch of the paper's fig 8 filters)."""
-        fire = fires_sync_downstream(y)
-        out = [(c, False) for c in spec.calls if fire]
-        out += [(c, True) for c in spec.async_calls]
-        return out
 
     def is_read_only(self, fn_name: str) -> bool:
         """Whether invoking ``fn_name`` is free of state mutation ANYWHERE

@@ -70,24 +70,38 @@ retained and returned by the NEXT ``flush``/``pump``.
 ``discard(ticket)``/``pending()`` are the public queue-surgery API for
 recovering from a poisoned request (see docs/batched_engine.md).
 
-Concurrency (the staged dispatch pipeline): a flush cycle is three stages —
-(1) a SERIAL window-collection/validation stage under the queue lock,
-(2) a PARALLEL execution stage where the cycle's independent ``(fn, node)``
-groups run on a per-store-node executor pool (``use_workers(n)``; one
-single-worker executor per store node so same-store work keeps its fold
-order — the determinism contract: ``workers=4`` produces the identical
-ticket→result map as ``workers=1``), and (3) a SERIAL merge stage folding
-coalesced replication snapshots and assembling results.  Two engine locks
-keep ``submit`` (the client hot path) off the dispatch path: ``_qlock``
-guards the window queue/tickets/ready-results and is only ever held for
-host-side bookkeeping; ``_cycle_lock`` serializes whole flush cycles (JAX
-dispatches run under it, never under ``_qlock``).  See the "Concurrency
-contract" section of docs/batched_engine.md for the full lock hierarchy.
+Concurrency (the per-frame dataflow scheduler): a flush cycle no longer
+barriers per downstream wave.  Every unit of dispatch work — a top-level
+window's group or a merged downstream batch — is sealed as a TASK with a
+global seal sequence number and executed on its store node's LANE (the
+per-store-node single-worker executors of ``use_workers(n)``).  The
+readiness rule is per frame: a frame dispatches the moment (a) its input
+batch is sealed and (b) its store node's prior fold has committed — lane
+FIFO in seal order IS the fold clock, so a straggling store node delays
+only the frames that fold into it while every other lane keeps flowing.
+Downstream COMPOSITION stays wave-synchronized (which requests merge into
+which batch is decided from all frames that can still fire a call — the
+determinism contract: ``workers=4`` produces the identical ticket→result
+map as ``workers=1``), but leaf frames — no ``calls``/``async_calls`` and
+no ancestor that can still pop a callee — never gate composition: their
+lanes stream to completion independently, and each top-level window's
+results are handed to ``on_ready`` the moment its last frame finalizes
+(mid-cycle incremental delivery; ``wave_barrier=True`` restores the old
+everything-at-cycle-end behaviour for A/B comparison).  Replication
+snapshots still coalesce in a serial merge after the last task commits.
+Two engine locks keep ``submit`` (the client hot path) off the dispatch
+path: ``_qlock`` guards the window queue/tickets/ready-results and is only
+ever held for host-side bookkeeping; ``_cycle_lock`` serializes whole
+flush cycles (JAX dispatches run under it, never under ``_qlock``).  See
+the "Concurrency contract" section of docs/batched_engine.md for the full
+lock hierarchy.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
+import queue
 import threading
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -118,6 +132,10 @@ class _Pending:
     t_arrive: float
     client: str
     payload_bytes: int
+    # reroute accounting is per-request-TERMINAL: however many times this
+    # request moves off dead nodes (eviction sweeps, dispatch-time liveness
+    # rechecks), it bumps ``stats.reroutes`` at most once
+    rerouted: bool = False
 
 
 @dataclasses.dataclass(eq=False)        # identity semantics for in/remove
@@ -173,6 +191,26 @@ class _Frame:
         return len(self.t_sends)
 
 
+@dataclasses.dataclass(eq=False)
+class _Task:
+    """One sealed unit of dispatch work on a store-key lane: a top-level
+    window's group, or one merged downstream batch.  ``seq`` is the global
+    seal sequence — every lane executes its tasks in ``seq`` order (the
+    lane executors are single-worker, so submission order is FIFO), which
+    is the per-frame readiness rule's fold clock: a task runs only after
+    its store node's prior fold committed.  ``relevant`` marks tasks whose
+    frames can still change downstream COMPOSITION (they have callees to
+    pop, or an ancestor does) — only those gate the next wave's batch
+    merge; leaf tasks stream to completion independently."""
+    seq: int
+    store_key: str
+    args: tuple                     # _exec_group(*args)
+    window: Optional[_Window]       # top-level origin (None for downstream)
+    relevant: bool
+    frames: Optional[List[_Frame]] = None
+    error: Optional[BaseException] = None
+
+
 @dataclasses.dataclass
 class AtomicStats:
     """Base for stats dataclasses whose counters are bumped from multiple
@@ -206,7 +244,9 @@ class EngineStats(AtomicStats):
                                     # coalescing
     reroutes: int = 0               # requests moved off a dead node to a
                                     # surviving deployment (queued windows
-                                    # at eviction + frames at dispatch)
+                                    # at eviction + frames at dispatch);
+                                    # counted at most ONCE per request, no
+                                    # matter how many times it moves
     dropped_dead: int = 0           # requests dropped because NO live
                                     # deployment remained (fail-fast under
                                     # the at-most-once contract)
@@ -281,6 +321,26 @@ class BatchedInvocationEngine:
         # set (handoff latency vs throughput trade); tests override it to
         # force the pool path on small streams
         self.min_parallel_requests = MIN_PARALLEL_REQUESTS
+        # incremental delivery hook: called from the cycle coordinator (the
+        # pump caller's thread, under _cycle_lock) with {ticket: result}
+        # the moment a top-level window's last frame finalizes — delivered
+        # tickets are EXCLUDED from the pump/flush return.  None keeps the
+        # classic collect-everything-then-return behaviour.  The callback
+        # may take locks BELOW _cycle_lock in the documented hierarchy
+        # (router lock, server cond) but must never re-enter the engine's
+        # flush path
+        self.on_ready: Optional[Callable[[Dict[int, Any]], None]] = None
+        # compat knob for A/B benchmarks: True restores the old wave
+        # barrier's observable timing — every composition waits on every
+        # task of the prior wave and nothing is delivered before the
+        # cycle's end (values are identical either way)
+        self.wave_barrier = False
+        # debug/property-test hook: record (store_key, seal_seq) at the
+        # moment each task starts executing, so tests can assert that
+        # dispatch order respects per-store-node fold (seal) order
+        self.trace_folds = False
+        self.fold_trace: List[Tuple[str, int]] = []
+        self._trace_lock = threading.Lock()
 
     def _hop_ms(self, client: str, node: str, payload_bytes: int) -> float:
         key = (client, node, payload_bytes)
@@ -480,7 +540,7 @@ class BatchedInvocationEngine:
         an undeployed function on a LIVE node still raises the usual
         ``_validate`` KeyError with the queue left intact."""
         c = self.cluster
-        rerouted = dropped = 0
+        rerouted = dropped = fresh = 0
         with self._qlock:
             dead = [w for w in self._windows
                     if w.key[1] in c.nodes
@@ -502,8 +562,11 @@ class BatchedInvocationEngine:
                         (p.fn, alt, p.client, p.payload_bytes), p.t_arrive)
                     w2.ps.append(p)
                     rerouted += 1
-        if rerouted:
-            self.stats.inc("reroutes", rerouted)
+                    if not p.rerouted:      # per-request-terminal ledger: a
+                        p.rerouted = True   # request that keeps moving off
+                        fresh += 1          # dying nodes counts ONCE
+        if fresh:
+            self.stats.inc("reroutes", fresh)
         if dropped:
             self.stats.inc("dropped_dead", dropped)
         return (rerouted, dropped)
@@ -586,13 +649,19 @@ class BatchedInvocationEngine:
             t_sends = [0.0] * n
         if len(t_sends) != n:
             raise ValueError(f"{n} inputs but {len(t_sends)} send times")
+        # one ledger for every invocation path: dispatch counts its
+        # requests as submitted so submitted == flushed + dropped holds
+        # engine-wide (the stress test asserts the exact conservation)
+        self.stats.inc("submitted", n)
         w = _Window(key=(fn_name, node, client, payload_bytes),
                     deadline=math.inf)
         hop = self._hop_ms(client, node, payload_bytes)
         for i, (x, t) in enumerate(zip(xs, t_sends)):
             w.ps.append(_Pending(i, fn_name, node, x, t, t + hop, client,
                                  payload_bytes))
-        by_ticket = self._run_cycle([w], [None])
+        # deliver=False: the caller drains this cycle synchronously, so
+        # results must come back here, not stream out through on_ready
+        by_ticket = self._run_cycle([w], [None], deliver=False)
         return [by_ticket[i] for i in range(n)]
 
     # ------------------------------------------------------------ flush cycle
@@ -605,55 +674,23 @@ class BatchedInvocationEngine:
             self.cluster.specs[fn], node)
         return store_node if kg is not None else node
 
-    def _exec_slots(self, items: Sequence, body) -> List:
-        """Pool-worker body: run one store node's work items in order.
-        ``items`` is ``(slot, payload)`` pairs; returns ``(slot,
-        result-or-exception)`` — a failure is recorded, not raised, so
-        the node's later items still run (every item of a parallel cycle
-        has started; at-most-once)."""
-        out = []
-        for slot, payload in items:
-            try:
-                out.append((slot, body(payload)))
-            except Exception as e:
-                out.append((slot, e))
-        return out
-
-    def _exec_keyed(self, pool: Optional[_NodePool], by_key: Dict[str, List],
-                    body, n_slots: int, total_requests: int) -> List[Any]:
-        """Execute per-store-key item lists — inline when there is one
-        key or too little work to amortize executor handoff, else ONE
-        pool job per store key — and return results reassembled in SLOT
-        order: the serial pump's order, whichever worker finished first
-        (the determinism contract hangs on this reassembly).  Shared by
-        the top-level exec stage and every downstream wave."""
-        if (pool is None or len(by_key) == 1
-                or total_requests < self.min_parallel_requests):
-            parts = [self._exec_slots(items, body)
-                     for items in by_key.values()]
-        else:
-            futs = [pool.submit(k, self._exec_slots, items, body)
-                    for k, items in by_key.items()]
-            parts = [fut.result() for fut in futs]
-        out: List[Any] = [None] * n_slots
-        for part in parts:
-            for slot, r in part:
-                out[slot] = r
-        return out
-
     def _run_cycle(self, windows: Sequence[_Window],
-                   floors: Sequence[Optional[float]]) -> Dict[int, Any]:
+                   floors: Sequence[Optional[float]],
+                   deliver: bool = True) -> Dict[int, Any]:
         """Dispatch ``windows`` as one cycle of parallel per-(fn, node)
-        timelines and return {ticket: InvokeResult}.
+        timelines and return {ticket: InvokeResult} for everything NOT
+        already streamed out through ``on_ready``.
 
         Three stages: (1) serial collect — per-store-node delivery
-        high-water marks from every window of the cycle; (2) exec — the
-        independent groups run in-line (serial pump) or on the per-store-
-        node executor pool (``use_workers``), including the downstream
-        waves; (3) serial merge — coalesced replication snapshots are
-        scheduled and per-ticket results assembled.  Cycles are serialized
-        by ``_cycle_lock``; stage 2 is the only place device dispatches
-        happen."""
+        high-water marks from every window of the cycle; (2) the dataflow
+        scheduler (``_CycleRun``) — tasks sealed in a deterministic global
+        sequence execute on per-store-node lanes, downstream batches are
+        composed as their callers' frames resolve, and completed windows
+        deliver the moment their last frame finalizes; (3) serial merge —
+        coalesced replication snapshots are scheduled after the last task
+        commits.  Cycles are serialized by ``_cycle_lock``; stage 2 is the
+        only place device dispatches happen.  ``deliver=False`` keeps all
+        results in the return value (the synchronous ``dispatch`` path)."""
         with self._cycle_lock:
             c = self.cluster
             self.stats.inc("cycles")
@@ -670,177 +707,26 @@ class BatchedInvocationEngine:
                 cycle.hwm[store_node] = max(
                     cycle.hwm.get(store_node, -math.inf), hi)
 
-            # ---- stage 2: execute the cycle's groups + downstream waves
-            pool = self._get_pool()
-            frames: List[_Frame] = []
-            top: List[Tuple[_Window, List[_Frame]]] = []
-            err: Optional[BaseException] = None
-            if pool is None:
-                for wi, (w, floor) in enumerate(zip(windows, floors)):
-                    fn, node, client, payload = w.key
-                    try:
-                        fs = self._exec_group(
-                            fn, node, [p.x for p in w.ps],
-                            [p.t_send for p in w.ps], client, payload,
-                            floor, cycle, 0, [None] * len(w.ps))
-                    except Exception as e:
-                        # the failing window is dropped (its effects may
-                        # have partially committed: at-most-once); windows
-                        # that never started dispatching go back on the
-                        # queue
-                        err = e
-                        with self._qlock:
-                            self._windows.extend(windows[wi + 1:])
-                        break
-                    top.append((w, fs))
-                    frames.extend(fs)
-            else:
-                # ONE job per store node: the node's worker executes all
-                # of that node's groups in window order (identical fold
-                # order to the serial pump), independent store nodes
-                # dispatch concurrently; results reassembled in window
-                # order so the frame list (and therefore the order
-                # downstream waves fold shared stores in) matches serial
-                def run_window(item, _cycle=cycle):
-                    w, floor = item
-                    fn, node, client, payload = w.key
-                    return self._exec_group(
-                        fn, node, [p.x for p in w.ps],
-                        [p.t_send for p in w.ps], client, payload,
-                        floor, _cycle, 0, [None] * len(w.ps))
-
-                by_key: Dict[str, List] = {}
-                for i, (w, floor) in enumerate(zip(windows, floors)):
-                    fn, node, _, _ = w.key
-                    by_key.setdefault(self._store_key(fn, node),
-                                      []).append((i, (w, floor)))
-                results = self._exec_keyed(
-                    pool, by_key, run_window, len(windows),
-                    sum(len(w.ps) for w in windows))
-                for w, fs in zip(windows, results):
-                    if isinstance(fs, BaseException):
-                        # at-most-once: the failing group is dropped;
-                        # every other group of the cycle has already
-                        # started and completes (or fails) on its own
-                        if err is None:
-                            err = fs
-                        continue
-                    top.append((w, fs))
-                    frames.extend(fs)
-
-            try:
-                self._run_downstream_waves(frames, cycle, pool)
-            except Exception as e:
-                if err is None:
-                    err = e
+            # ---- stage 2: the per-frame dataflow scheduler
+            run = _CycleRun(self, cycle, deliver)
+            out = run.run(windows, floors)
 
             # ---- stage 3 (serial merge): ONE coalesced replication
             # snapshot per written keygroup per node, with the post-cycle
             # contents at the latest apply time.  Sorted for a
-            # deterministic event order regardless of which worker
+            # deterministic event order regardless of which lane
             # finished first
             for (kg, store_node) in sorted(cycle.repl):
                 c._schedule_replication(kg, store_node,
                                         cycle.repl[(kg, store_node)])
 
-            out: Dict[int, Any] = {}
-            for w, fs in top:
-                rs: List[Any] = []
-                for f in fs:
-                    if f.results is None:   # unfinalized under err: lost
-                        rs = None
-                        break
-                    rs.extend(f.results)
-                if rs is None:
-                    continue
-                self.stats.inc("windows_flushed")
-                self.stats.inc("requests_flushed", len(w.ps))
-                for p, r in zip(w.ps, rs):
-                    out[p.ticket] = r
-            if err is not None:
+            if run.errors:
                 with self._qlock:
                     self._ready.update(out)
-                raise err
+                # the lowest-seal-sequence failure: window errors in window
+                # order first, then the failing wave's earliest batch
+                raise min(run.errors)[1]
             return out
-
-    def _run_downstream_waves(self, frames: List[_Frame], cycle: _Cycle,
-                              pool: Optional[_NodePool] = None) -> None:
-        """Drive every frame's downstream chain to completion, coalescing
-        same-``(callee, target)`` requests across caller frames per wave.
-        With a pool, the wave's merged batches dispatch concurrently —
-        keyed by each callee's store node, so same-store batches keep
-        their (deterministic) wave order."""
-        c = self.cluster
-        while True:
-            finalized = self._finalize_ready(frames)
-            # fire the next callee of each unblocked frame; requests to the
-            # same (callee, target, caller-node, payload) merge into one batch
-            reqs: Dict[Tuple, List[Tuple[Any, float, Tuple]]] = {}
-            popped = False
-            for f in frames:
-                if f.results is not None or f.outstanding:
-                    continue
-                while f.todo:
-                    callee, is_async = f.todo[0]
-                    idxs = (list(range(f.n)) if is_async
-                            else [i for i in range(f.n) if f.fires[i]])
-                    if not idxs:
-                        f.todo.pop(0)       # nobody fires: skip this callee
-                        popped = True
-                        continue
-                    f.todo.pop(0)
-                    popped = True
-                    target = c._nearest_deployment(callee, f.node)
-                    lst = reqs.setdefault(
-                        (callee, target, f.node, f.payload_bytes), [])
-                    for i in idxs:
-                        lst.append((f.outputs[i], f.t_downs[i],
-                                    (f, i, is_async)))
-                    f.outstanding = len(idxs)
-                    break                   # one callee per frame per wave
-            if reqs:
-                calls = []
-                for (callee, target, caller, payload), lst in reqs.items():
-                    callers = {id(slot[0]) for _, _, slot in lst}
-                    if len(callers) > 1:
-                        self.stats.inc("downstream_coalesced", len(lst))
-                    depth = 1 + max(slot[0].depth for _, _, slot in lst)
-                    calls.append((callee, target,
-                                  (callee, target, [x for x, _, _ in lst],
-                                   [t for _, t, _ in lst], caller, payload,
-                                   None, cycle, depth,
-                                   [slot for _, _, slot in lst])))
-                if pool is None:
-                    for _, _, args in calls:
-                        frames.extend(self._exec_group(*args))
-                else:
-                    # same shape as stage 2: one job per store node per
-                    # wave (callee batches in wave order within it),
-                    # frames reassembled in wave order afterwards
-                    by_key: Dict[str, List] = {}
-                    for idx, (callee, target, args) in enumerate(calls):
-                        by_key.setdefault(self._store_key(callee, target),
-                                          []).append((idx, args))
-                    ordered = self._exec_keyed(
-                        pool, by_key, lambda args: self._exec_group(*args),
-                        len(calls),
-                        sum(len(args[2]) for _, _, args in calls))
-                    for fs in ordered:      # all batches have run: raise
-                        if isinstance(fs, BaseException):    # earliest
-                            raise fs        # error, like serial fail-fast
-                    for fs in ordered:
-                        frames.extend(fs)
-                continue
-            # no fires this round: a frame may still have drained its todo
-            # by skipping (all callees filtered) — loop once more so the
-            # finalize pass picks it up; stop when nothing moves at all
-            if not finalized and not popped:
-                break
-        stuck = [f for f in frames if f.results is None]
-        if stuck:
-            raise RuntimeError(
-                f"flush cycle deadlocked with {len(stuck)} unfinalized "
-                f"frames (first: {stuck[0].fn!r}) — engine invariant bug")
 
     def _finalize_ready(self, frames: List[_Frame]) -> bool:
         """Finalize every frame with no remaining work, cascading upward
@@ -881,13 +767,16 @@ class BatchedInvocationEngine:
     def _exec_group(self, fn_name: str, node: str, xs: Sequence,
                     t_sends: Sequence[float], client: str, payload_bytes: int,
                     floor: Optional[float], cycle: _Cycle, depth: int,
-                    parents: Sequence) -> List[_Frame]:
+                    parents: Sequence,
+                    pendings: Optional[Sequence[_Pending]] = None
+                    ) -> List[_Frame]:
         cap = self.buckets[-1]
         frames = []
         for lo in range(0, len(xs), cap):
             frames.append(self._exec_chunk(
                 fn_name, node, xs[lo:lo + cap], t_sends[lo:lo + cap], client,
-                payload_bytes, floor, cycle, depth, parents[lo:lo + cap]))
+                payload_bytes, floor, cycle, depth, parents[lo:lo + cap],
+                pendings[lo:lo + cap] if pendings is not None else None))
         return frames
 
     def _bucket(self, n: int) -> int:
@@ -898,7 +787,8 @@ class BatchedInvocationEngine:
 
     def _exec_chunk(self, fn_name: str, node: str, xs, t_sends, client: str,
                     payload_bytes: int, floor: Optional[float], cycle: _Cycle,
-                    depth: int, parents) -> _Frame:
+                    depth: int, parents,
+                    pendings: Optional[Sequence[_Pending]] = None) -> _Frame:
         """Run the main batched dispatch of one chunk (store effects +
         per-request timeline); downstream routing is the cycle driver's job."""
         from repro.core.cluster import fires_sync_downstream
@@ -921,7 +811,17 @@ class BatchedInvocationEngine:
             # normal failure path (tickets vanish; the server fails them
             # fast as RequestLost)
             node = c._nearest_deployment(fn_name, client)
-            self.stats.inc("reroutes", n)
+            if pendings is None:        # downstream frames have no ticket:
+                self.stats.inc("reroutes", n)   # single-shot, count as-is
+            else:
+                # top-level requests carry the per-request-terminal flag: a
+                # request already counted by an eviction sweep does not
+                # count again when its NEW target also dies before dispatch
+                fresh = [p for p in pendings if not p.rerouted]
+                for p in fresh:
+                    p.rerouted = True
+                if fresh:
+                    self.stats.inc("reroutes", len(fresh))
         nd = c.nodes[node]
         bhandler = nd.batched_handlers[fn_name]
         self.stats.inc("dispatches")
@@ -1004,3 +904,295 @@ class BatchedInvocationEngine:
             outputs=outputs, t_applieds=t_applieds,
             chains=[[fn_name] for _ in range(n)], t_downs=list(t_applieds),
             ops=list(ops), todo=todo, fires=fires, parents=list(parents))
+
+
+class _CycleRun:
+    """One flush cycle's dataflow scheduler, driven by the pump caller's
+    thread under the engine's cycle lock (the coordinator).
+
+    Execution is PER-FRAME: every task (a top-level window group or a
+    merged downstream batch) is sealed with a global sequence number and
+    handed to its store node's lane — a single-worker executor, so lane
+    order IS seal order, which is the fold-clock half of the readiness
+    rule (a frame dispatches once its store node's prior fold committed).
+    Composition stays deterministic: the next wave of downstream batches
+    is merged only once every COMPOSITION-RELEVANT task has committed —
+    one whose frames (or their ancestors) can still pop a callee.  Leaf
+    tasks never gate composition, so a straggling store node delays only
+    the frames that fold into it; completed top-level windows deliver the
+    moment their last frame finalizes (``engine.on_ready``).
+
+    Serial mode (no pool / one store key / cycle under
+    ``min_parallel_requests``) runs the same seal sequence from a deque on
+    the coordinator itself — identical values, no handoff latency."""
+
+    def __init__(self, eng: "BatchedInvocationEngine", cycle: _Cycle,
+                 deliver: bool):
+        self.eng = eng
+        self.cycle = cycle
+        self.deliver = deliver
+        self.pool: Optional[_NodePool] = None
+        self.fifo: "collections.deque[_Task]" = collections.deque()
+        self.done_q: "queue.SimpleQueue[_Task]" = queue.SimpleQueue()
+        self.next_seq = 0
+        self.inflight = 0               # sealed, not yet processed
+        self.pending_relevant = 0       # composition-relevant in flight
+        self.frames_by_seq: Dict[int, List[_Frame]] = {}
+        self.tops: List[_Task] = []     # completed-but-undelivered windows
+        self.errors: List[Tuple[int, BaseException]] = []
+        self.aborted = False            # downstream failure: stop composing
+        self.out: Dict[int, Any] = {}   # undelivered {ticket: result}
+
+    # -------------------------------------------------------------- main loop
+    def run(self, windows: Sequence[_Window],
+            floors: Sequence[Optional[float]]) -> Dict[int, Any]:
+        eng = self.eng
+        c = eng.cluster
+        keys = [eng._store_key(w.key[0], w.key[1]) for w in windows]
+        total = sum(len(w.ps) for w in windows)
+        pool = eng._get_pool()
+        # one mode per cycle: lanes would race an inline dispatch on the
+        # same store, so either every task rides the pool or none does
+        if (pool is not None and len(set(keys)) > 1
+                and total >= eng.min_parallel_requests):
+            self.pool = pool
+        for w, floor, key in zip(windows, floors, keys):
+            fn, node, client, payload = w.key
+            spec = c.specs[fn]
+            args = (fn, node, [p.x for p in w.ps], [p.t_send for p in w.ps],
+                    client, payload, floor, self.cycle, 0,
+                    [None] * len(w.ps), list(w.ps))
+            self._seal(args, key, window=w,
+                       relevant=bool(eng.wave_barrier or spec.calls
+                                     or spec.async_calls))
+        while True:
+            self._drain_completed()
+            if self.pending_relevant or self.fifo:
+                self._wait_one()
+                continue
+            if self.aborted:
+                break
+            try:
+                reqs = self._compose()
+            except Exception as e:      # no live deployment of a callee
+                self.errors.append((self.next_seq, e))
+                break
+            if not reqs:
+                break
+            self._seal_wave(reqs)
+        # every composition is done: drain the remaining leaf lanes —
+        # each window still delivers the moment its lane commits
+        while self.inflight:
+            self._wait_one()
+        self._finalize_and_deliver()
+        if not self.errors:
+            stuck = [f for f in self._frames() if f.results is None]
+            if stuck:
+                raise RuntimeError(
+                    f"flush cycle deadlocked with {len(stuck)} unfinalized "
+                    f"frames (first: {stuck[0].fn!r}) — engine invariant bug")
+        return self.out
+
+    # ------------------------------------------------------------ lane plumbing
+    def _seal(self, args: tuple, store_key: str, window: Optional[_Window],
+              relevant: bool) -> _Task:
+        t = _Task(seq=self.next_seq, store_key=store_key, args=args,
+                  window=window, relevant=relevant)
+        self.next_seq += 1
+        self.inflight += 1
+        if relevant:
+            self.pending_relevant += 1
+        if self.pool is None:
+            self.fifo.append(t)
+        else:
+            self.pool.submit(store_key, self._pool_body, t)
+        return t
+
+    def _execute(self, t: _Task) -> None:
+        eng = self.eng
+        if eng.trace_folds:
+            with eng._trace_lock:
+                eng.fold_trace.append((t.store_key, t.seq))
+        try:
+            t.frames = eng._exec_group(*t.args)
+        except Exception as e:      # recorded, not raised: the lane's later
+            t.error = e             # tasks still run (at-most-once)
+
+    def _pool_body(self, t: _Task) -> None:
+        self._execute(t)
+        self.done_q.put(t)
+
+    def _drain_completed(self) -> None:
+        if self.pool is None:
+            return
+        while True:
+            try:
+                t = self.done_q.get_nowait()
+            except queue.Empty:
+                return
+            self._process(t)
+
+    def _wait_one(self) -> None:
+        if self.pool is None:
+            t = self.fifo.popleft()
+            self._execute(t)
+        else:
+            t = self.done_q.get()
+        self._process(t)
+
+    def _drop_fifo(self) -> List[_Task]:
+        dropped = []
+        while self.fifo:
+            s = self.fifo.popleft()
+            self.inflight -= 1
+            if s.relevant:
+                self.pending_relevant -= 1
+            dropped.append(s)
+        return dropped
+
+    def _process(self, t: _Task) -> None:
+        self.inflight -= 1
+        if t.relevant:
+            self.pending_relevant -= 1
+        if t.error is not None:
+            self.errors.append((t.seq, t.error))
+            if t.window is None:
+                # a downstream batch failed: no further wave composes (the
+                # wave loop always aborted here); serially, the unexecuted
+                # rest of the wave is dropped outright
+                self.aborted = True
+                if self.pool is None:
+                    self._drop_fifo()
+            elif self.pool is None:
+                # serial top-level contract: windows that never started
+                # dispatching go back on the queue intact
+                requeue = self._drop_fifo()
+                if requeue:
+                    with self.eng._qlock:
+                        self.eng._windows.extend(s.window for s in requeue)
+            return
+        self.frames_by_seq[t.seq] = t.frames
+        if t.window is not None:
+            self.tops.append(t)
+        self._finalize_and_deliver()
+
+    # --------------------------------------------------------------- finalize
+    def _frames(self) -> List[_Frame]:
+        """Every committed frame in seal order — the deterministic
+        iteration order composition (and its fold order) hangs on."""
+        out: List[_Frame] = []
+        for seq in sorted(self.frames_by_seq):
+            out.extend(self.frames_by_seq[seq])
+        return out
+
+    def _finalize_and_deliver(self) -> None:
+        self.eng._finalize_ready(self._frames())
+        self._deliver_tops()
+
+    def _deliver_tops(self) -> None:
+        for t in [t for t in self.tops
+                  if all(f.results is not None for f in t.frames)]:
+            self.tops.remove(t)
+            self._deliver_window(t)
+
+    def _deliver_window(self, t: _Task) -> None:
+        eng = self.eng
+        w = t.window
+        rs: List[Any] = []
+        for f in t.frames:
+            rs.extend(f.results)
+        eng.stats.inc("windows_flushed")
+        eng.stats.inc("requests_flushed", len(w.ps))
+        res = {p.ticket: r for p, r in zip(w.ps, rs)}
+        cb = eng.on_ready
+        if self.deliver and cb is not None and not eng.wave_barrier:
+            try:
+                cb(res)
+                return          # streamed out: not in the cycle's return
+            except Exception:
+                pass            # a broken callback must not lose results:
+                                # fall back to the classic return path
+        self.out.update(res)
+
+    # ------------------------------------------------------------ composition
+    def _compose(self) -> Optional[Dict[Tuple, List]]:
+        """Merge the next wave's downstream batches: fire the next callee
+        of each unblocked frame, coalescing same-(callee, target, caller
+        node, payload) requests across caller frames.  Returns ``None``
+        when nothing can move any more (the cycle's chains are done)."""
+        eng = self.eng
+        c = eng.cluster
+        frames = self._frames()
+        while True:
+            finalized = eng._finalize_ready(frames)
+            if finalized:
+                self._deliver_tops()
+            reqs: Dict[Tuple, List[Tuple[Any, float, Tuple]]] = {}
+            popped = False
+            for f in frames:
+                if f.results is not None or f.outstanding:
+                    continue
+                while f.todo:
+                    callee, is_async = f.todo[0]
+                    idxs = (list(range(f.n)) if is_async
+                            else [i for i in range(f.n) if f.fires[i]])
+                    if not idxs:
+                        f.todo.pop(0)       # nobody fires: skip this callee
+                        popped = True
+                        continue
+                    f.todo.pop(0)
+                    popped = True
+                    target = c._nearest_deployment(callee, f.node)
+                    lst = reqs.setdefault(
+                        (callee, target, f.node, f.payload_bytes), [])
+                    for i in idxs:
+                        lst.append((f.outputs[i], f.t_downs[i],
+                                    (f, i, is_async)))
+                    f.outstanding = len(idxs)
+                    break                   # one callee per frame per wave
+            if reqs:
+                return reqs
+            # no fires this pass: a frame may still have drained its todo
+            # by skipping (all callees filtered) — loop once more so the
+            # finalize pass picks it up; quiesce when nothing moves
+            if not finalized and not popped:
+                return None
+
+    def _seal_wave(self, reqs: Dict[Tuple, List]) -> None:
+        eng = self.eng
+        c = eng.cluster
+        for (callee, target, caller, payload), lst in reqs.items():
+            callers = {id(slot[0]) for _, _, slot in lst}
+            if len(callers) > 1:
+                eng.stats.inc("downstream_coalesced", len(lst))
+            depth = 1 + max(slot[0].depth for _, _, slot in lst)
+            spec = c.specs[callee]
+            relevant = bool(
+                eng.wave_barrier or spec.calls or spec.async_calls
+                or any(self._chain_may_pop(slot[0]) for _, _, slot in lst))
+            args = (callee, target, [x for x, _, _ in lst],
+                    [t for _, t, _ in lst], caller, payload, None,
+                    self.cycle, depth, [slot for _, _, slot in lst])
+            self._seal(args, eng._store_key(callee, target), window=None,
+                       relevant=relevant)
+
+    @staticmethod
+    def _chain_may_pop(f: _Frame) -> bool:
+        """Whether finalizing a new child of ``f`` could still change
+        downstream composition: some frame on the ancestor chain has a
+        callee left to pop.  When nothing up the chain can pop, the child
+        batch is a pure leaf — its lane streams to completion without
+        gating the next wave (the straggler-independence rule)."""
+        seen = set()
+        stack: List[_Frame] = [f]
+        while stack:
+            g = stack.pop()
+            if id(g) in seen:
+                continue
+            seen.add(id(g))
+            if g.todo:
+                return True
+            for par in g.parents:
+                if par is not None:
+                    stack.append(par[0])
+        return False

@@ -5,6 +5,14 @@ instances" (§6) — the router codifies that: pick the lowest-latency live
 deployment that satisfies the session's consistency requirement, with an
 optional hedged second request as straggler mitigation (runtime tier).
 
+EVERY invocation path runs through the batched engine's dataflow
+scheduler: ``invoke`` submits a singleton ticket and pumps the engine
+until it resolves, so one-off and batched requests share one queue, one
+set of windows, one hedging mechanism and one stats ledger (there is no
+separate post-hoc hedge anymore — a singleton's "window" closes at
+``+inf`` without ``window_ms``, which makes every queued singleton
+hedge-eligible the moment its ``hedge_after_ms`` deadline passes).
+
 Correctness notes (the two bugs PR 2 fixed):
 
 * hedging re-invokes the function, so it is only safe for READ-ONLY
@@ -132,6 +140,11 @@ class Router:
         # deploy-time traces are static, so read-only-ness per fn is too:
         # cache it off the hedging hot path (is_read_only walks call graphs)
         self._ro_cache: Dict[str, bool] = {}
+        # results a synchronous ``invoke`` drained for OTHER tickets of
+        # this router while pumping for its own: parked here (instead of
+        # handing them back to the engine as foreign, which would recycle
+        # them forever) and merged into the next fold's return
+        self._claimed: Dict[int, InvokeResult] = {}
         # guards sessions/_inflight/_hedges; held for host-side folds only,
         # never across an engine dispatch (lock hierarchy: router lock >
         # engine cycle lock > engine queue lock)
@@ -215,44 +228,39 @@ class Router:
     def invoke(self, fn_name: str, x, t_send: float = 0.0,
                session_id: Optional[str] = None,
                payload_bytes: int = 64) -> InvokeResult:
-        session = self._session(session_id)
-        node = self.pick(fn_name, session)
-        self.stats.inc("requests")
-        res = self.cluster.invoke(fn_name, node, x, t_send=t_send,
-                                  client=self.client,
-                                  payload_bytes=payload_bytes)
-        # EVERY completion feeds its replica's latency EWMA exactly once —
-        # the primary here, the hedge below if one fires (so a slow
-        # primary that loses its hedge still teaches the policy it is slow)
-        self.stats.observe_latency(res.node, res.response_ms,
-                                   self.EWMA_ALPHA)
-
-        # hedged request: if the primary exceeded the hedge deadline, fire the
-        # second-nearest replica and take the earlier completion (straggler
-        # mitigation).  Re-invoking re-RUNS the handler, so only read-only
-        # handlers may hedge: a mutating handler would apply its writes (and
-        # schedule replication) twice.
-        if (self.hedge_after_ms is not None
-                and res.response_ms > self.hedge_after_ms):
-            cands = self.candidates(fn_name)
-            if len(cands) > 1:
-                if self.cluster.is_read_only(fn_name):
-                    self.stats.inc("hedges_fired")
-                    alt = self.cluster.invoke(
-                        fn_name, cands[1], x,
-                        t_send=t_send + self.hedge_after_ms,
-                        client=self.client, payload_bytes=payload_bytes)
-                    self.stats.observe_latency(alt.node, alt.response_ms,
-                                               self.EWMA_ALPHA)
-                    if alt.t_received < res.t_received:
-                        self.stats.inc("hedge_wins")
-                        res = alt
-                else:
-                    self.stats.inc("hedges_suppressed")
-        if session is not None:
+        """One-off invocation through the SAME engine path as
+        ``submit``/``pump``: submits a singleton ticket and pumps the
+        engine (by ``next_deadline``, so every due hedge fires at its
+        instant) until the ticket resolves.  This retires the separate
+        sequential code path: the singleton rides the dataflow scheduler,
+        shares the dead-node eviction and stats ledger, folds into its
+        session through ``_fold``, and — with ``hedge_after_ms`` set —
+        gets the WINDOWED hedge (``_maybe_hedge``/``_hedge_target``, the
+        lowest-EWMA session-satisfying replica) instead of a bespoke
+        post-hoc duplicate.  Results other tickets of this router
+        surfaced during the drain are parked in ``_claimed`` for their
+        owner's next ``pump``/``flush``."""
+        ticket = self.submit(fn_name, x, t_send=t_send,
+                             session_id=session_id,
+                             payload_bytes=payload_bytes)
+        while True:
             with self._lock:
-                self._observe(session, fn_name, res)
-        return res
+                res = self._claimed.pop(ticket, None)
+            if res is not None:
+                return res
+            nxt = self.next_deadline()
+            out = self.pump(math.inf if nxt is None else nxt)
+            res = out.pop(ticket, None)
+            if out:
+                with self._lock:
+                    self._claimed.update(out)
+            if res is not None:
+                return res
+            if not self.tracks(ticket):
+                # dropped by a failed flush cycle / dead-node fail-fast:
+                # at-most-once, surface the loss instead of spinning
+                raise KeyError(f"ticket {ticket} ({fn_name!r}) was "
+                               f"dropped before completing")
 
     def _observe(self, session: Session, fn_name: str,
                  res: InvokeResult) -> None:
@@ -334,6 +342,18 @@ class Router:
         results = self.cluster.engine.flush()
         with self._lock:
             return self._fold(results)
+
+    def fold_now(self, results: Dict[int, InvokeResult]
+                 ) -> Dict[int, InvokeResult]:
+        """Fold results delivered MID-CYCLE by the engine's dataflow
+        scheduler (``engine.on_ready``: a window's results surface the
+        moment its last frame finalizes, while the flush cycle is still
+        running).  Same session/hedge/EWMA bookkeeping as a pump's fold,
+        with two midcycle restrictions (see ``_fold``): no in-flight
+        pruning, and no partner-dead hedge settlement — both judgements
+        need the cycle-end view of the queue."""
+        with self._lock:
+            return self._fold(results, midcycle=True)
 
     def tracks(self, ticket: int) -> bool:
         """Whether ``ticket`` can still produce a result through this
@@ -458,8 +478,14 @@ class Router:
             return min(sampled, key=lambda n: ewma[n])
         return eligible[0]
 
-    def _fold(self, results: Dict[int, InvokeResult]) -> Dict[int, InvokeResult]:
+    def _fold(self, results: Dict[int, InvokeResult],
+              midcycle: bool = False) -> Dict[int, InvokeResult]:
         mine: Dict[int, InvokeResult] = {}
+        if self._claimed:
+            # results a synchronous invoke drained for this router's other
+            # tickets: already folded — just surface them to this caller
+            mine.update(self._claimed)
+            self._claimed.clear()
         foreign: Dict[int, InvokeResult] = {}
         touched: List[_Hedge] = []
         for ticket, res in results.items():
@@ -480,15 +506,19 @@ class Router:
         queued = {p["ticket"]: p["deadline"]
                   for p in self.cluster.engine.pending()}
         for pair in touched:
-            res = self._try_resolve_hedge(pair, queued)
+            res = self._try_resolve_hedge(pair, queued, midcycle=midcycle)
             if res is not None:
                 mine[pair.primary] = res
         if foreign:
             self.cluster.engine.hold_results(foreign)
         # prune in-flight tickets that can no longer complete: not in this
         # drain and no longer queued — dropped by a failed cycle's
-        # at-most-once contract or discarded via engine.discard
-        if self._inflight:
+        # at-most-once contract or discarded via engine.discard.  NEVER
+        # midcycle: a ticket being dispatched by the running cycle is
+        # neither queued nor in this partial drain, yet it is about to
+        # complete — pruning it here would fail every in-flight future the
+        # moment the first window of a cycle delivered
+        if self._inflight and not midcycle:
             for t in [t for t in self._inflight
                       if t not in results and t not in queued]:
                 pair = self._hedges.get(t)
@@ -508,7 +538,8 @@ class Router:
                     del self._inflight[t]
         return mine
 
-    def _try_resolve_hedge(self, pair: _Hedge, queued: Dict[int, float]
+    def _try_resolve_hedge(self, pair: _Hedge, queued: Dict[int, float],
+                           midcycle: bool = False
                            ) -> Optional[InvokeResult]:
         """Settle a hedged pair on the EARLIER completion.  With only one
         member complete, the pair settles early iff the partner provably
@@ -525,6 +556,13 @@ class Router:
         present, missing = (pr, pair.hedge) if hr is None else (hr, pair.primary)
         deadline = queued.get(missing)
         if deadline is None:
+            if midcycle:
+                # the partner is not queued but the cycle is still
+                # RUNNING: it may be dispatching right now, its result one
+                # on_ready delivery away.  Wait — the cycle-end fold (or
+                # its prune path) settles the pair if the partner truly
+                # died
+                return None
             # partner dead (failed cycle / discarded): present completes
             return self._settle(pair, present, hr is not None)
         if (self.cluster.engine.max_batch is None

@@ -163,10 +163,16 @@ class FaasServer:
             return self
         eng = self.cluster.engine
         self._saved_engine_state = (eng.window_ms, eng.max_batch, eng.clock,
-                                    eng.workers)
+                                    eng.workers, eng.on_ready)
         eng.configure(window_ms=self.window_ms, max_batch=self.max_batch)
         eng.use_clock(self.now)
         eng.use_workers(self.workers)
+        # dataflow-scheduler delivery: a window's results surface the
+        # moment its last frame finalizes (mid-cycle), so a fast store
+        # node's futures resolve while a straggler node's frames are
+        # still executing — the serving loop's pump only picks up
+        # leftovers (held-back foreign results, barriered cycles)
+        eng.on_ready = self._on_engine_ready
         self._epoch = time.perf_counter()
         self._running = True
         self._thread = threading.Thread(target=self._serve_loop,
@@ -208,11 +214,13 @@ class FaasServer:
         # (knobs, clock and pump width) — the server's wall clock must not
         # outlive it
         if self._saved_engine_state is not None:
-            window_ms, max_batch, clock, workers = self._saved_engine_state
+            (window_ms, max_batch, clock, workers,
+             on_ready) = self._saved_engine_state
             self.cluster.engine.configure(window_ms=window_ms,
                                           max_batch=max_batch)
             self.cluster.engine.use_clock(clock)
             self.cluster.engine.use_workers(workers)
+            self.cluster.engine.on_ready = on_ready
             self._saved_engine_state = None
 
     def __enter__(self) -> "FaasServer":
@@ -372,6 +380,19 @@ class FaasServer:
                     # sleep EXACTLY until the next window close/hedge fire;
                     # a submit notifies and the loop re-arms
                     self._cond.wait(timeout=delay)
+
+    def _on_engine_ready(self, results: Dict[int, InvokeResult]) -> None:
+        """Mid-cycle delivery hook (``engine.on_ready``): called on the
+        thread running the flush cycle, with the engine cycle lock held,
+        the moment one window's results finalize.  Folds them through the
+        router (midcycle semantics: no pruning, no partner-dead hedge
+        settlement — see ``Router.fold_now``) and resolves futures right
+        away.  Lock order stays acyclic: cycle lock > router lock >
+        server cond; no path below takes an engine lock."""
+        mine = self.router.fold_now(results)
+        if mine:
+            with self._cond:
+                self._deliver(mine)
 
     def _resolve(self, fut: ServedRequest, res: InvokeResult) -> None:
         """Complete one future (under the server lock).  A client may have

@@ -332,6 +332,14 @@ def test_server_stress_racing_submitters():
     assert srv.stats.lost == 0
     assert srv.router.stats.requests == total
     assert c.engine.stats.requests_flushed - flushed_before == total
+    # EXACT conservation ledger (per-frame-terminal accounting): every
+    # submitted request flushed exactly once, and with no churn the
+    # reroute/drop counters must not drift — a request that is never
+    # moved is never counted, no matter how many cycles/waves it crossed
+    eng = c.engine.stats
+    assert eng.submitted == eng.requests_flushed + eng.dropped_dead
+    assert eng.reroutes == 0
+    assert eng.dropped_dead == 0
     # per-replica latency EWMAs got fed by the completions
     assert srv.router.stats.ewma_ms          # non-empty
     assert all(v > 0 for v in srv.router.stats.ewma_ms.values())

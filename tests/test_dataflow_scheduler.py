@@ -1,0 +1,204 @@
+"""Per-frame dataflow scheduler: a straggling store node must delay only
+the frames that fold into it (fast nodes' windows stream out mid-cycle via
+``engine.on_ready``), dispatch order must respect per-store-node seal
+(fold) order under any workers setting, and dead-node reroutes are counted
+at most once per request no matter how many times a request moves."""
+import time
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+pytestmark = pytest.mark.tier0  # fast pre-commit subset
+
+from repro.configs.base import ReplicationPolicy
+from repro.core import Cluster, enoki_function, get_function
+
+jax.config.update("jax_platform_name", "cpu")
+
+_NODES = ["edge", "edge2", "edge3"]
+
+
+@enoki_function(name="dfs_leaf", keygroups=[], codec_width=4)
+def dfs_leaf(kv, x):
+    """Stateless leaf — its store key is the serving node itself, so the
+    three nodes' windows ride three independent lanes."""
+    return x[:2]
+
+
+@enoki_function(name="dfs_parent", keygroups=[], calls=["dfs_sink"],
+                codec_width=4)
+def dfs_parent(kv, x):
+    return x[:2]
+
+
+@enoki_function(name="dfs_sink", keygroups=["dfskg"], codec_width=4)
+def dfs_sink(kv, x):
+    cur, _ = kv.get("n")
+    kv.set("n", cur + 1.0)
+    return x[:1]
+
+
+def _x(v=1.0):
+    return np.full(4, v, np.float32)
+
+
+def _leaf_cluster():
+    c = Cluster({n: "edge" for n in _NODES}, measure_compute=False)
+    c.deploy(get_function("dfs_leaf"), _NODES,
+             policy=ReplicationPolicy.REPLICATED)
+    # warm every node's singleton-bucket compile OUTSIDE the timed region
+    for n in _NODES:
+        c.invoke("dfs_leaf", n, _x())
+    return c
+
+
+def _slow_wrap(c, node, fn, sleep_s):
+    """Wall-clock straggler: ``set_compute_ms`` is virtual-only, so slow a
+    lane for real by wrapping the node's batched handler in a sleep."""
+    nd = c.nodes[node]
+    orig = nd.batched_handlers[fn]
+    done = [None]
+
+    def slow(*a, **kw):
+        time.sleep(sleep_s)
+        out = orig(*a, **kw)
+        done[0] = time.perf_counter()
+        return out
+
+    nd.batched_handlers[fn] = slow
+    return done
+
+
+# ---------------------------------------------------------------------------
+# straggler store node: fast lanes stream, slow lane delays only itself
+# ---------------------------------------------------------------------------
+
+def test_fast_nodes_stream_past_straggler():
+    """One store node 10x+ slower than the rest: the fast nodes' windows
+    must DELIVER (on_ready) before the slow node's handler has even
+    finished — under the old wave barrier every result waited for the
+    whole cycle."""
+    c = _leaf_cluster()
+    eng = c.engine
+    slow_done = _slow_wrap(c, "edge3", "dfs_leaf", sleep_s=0.25)
+    deliveries = []     # (wall stamp, tickets) per on_ready call
+    eng.on_ready = lambda res: deliveries.append(
+        (time.perf_counter(), set(res)))
+    eng.configure(window_ms=5.0).use_workers(4)
+    eng.min_parallel_requests = 1
+    tks = {n: eng.submit("dfs_leaf", n, _x()) for n in _NODES}
+    out = eng.pump(1e9)
+    assert out == {}                        # everything streamed out
+    assert slow_done[0] is not None
+    delivered = {}
+    for stamp, tickets in deliveries:
+        for t in tickets:
+            delivered[t] = stamp
+    assert set(delivered) == set(tks.values())
+    for n in ("edge", "edge2"):
+        assert delivered[tks[n]] < slow_done[0], \
+            f"{n}'s window waited for the straggler (wave barrier is back?)"
+
+
+def test_wave_barrier_restores_cycle_end_delivery():
+    """The A/B compat knob: with ``wave_barrier=True`` nothing streams
+    mid-cycle — every result comes back at pump return, after the slow
+    lane too."""
+    c = _leaf_cluster()
+    eng = c.engine
+    _slow_wrap(c, "edge3", "dfs_leaf", sleep_s=0.05)
+    fired = []
+    eng.on_ready = lambda res: fired.append(set(res))
+    eng.wave_barrier = True
+    eng.configure(window_ms=5.0).use_workers(4)
+    eng.min_parallel_requests = 1
+    tks = {n: eng.submit("dfs_leaf", n, _x()) for n in _NODES}
+    out = eng.pump(1e9)
+    assert fired == []
+    assert set(out) == set(tks.values())
+
+
+# ---------------------------------------------------------------------------
+# property: dispatch order respects per-store-node seal (fold) order
+# ---------------------------------------------------------------------------
+
+def _traced_cluster(workers):
+    c = Cluster({n: "edge" for n in _NODES}, measure_compute=False)
+    c.deploy(get_function("dfs_sink"), _NODES,
+             policy=ReplicationPolicy.REPLICATED)
+    c.deploy(get_function("dfs_parent"), _NODES,
+             policy=ReplicationPolicy.REPLICATED)
+    c.engine.configure(window_ms=5.0)
+    if workers:
+        c.engine.use_workers(workers)
+        c.engine.min_parallel_requests = 1
+    c.engine.trace_folds = True
+    return c
+
+
+_TRACED = {}
+
+
+def _get_traced(workers):
+    if workers not in _TRACED:
+        _TRACED[workers] = _traced_cluster(workers)
+    return _TRACED[workers]
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(_NODES), st.integers(1, 3)),
+                min_size=1, max_size=5))
+def test_fold_order_respects_per_store_seal_order(plan):
+    """For every store node, tasks must EXECUTE in seal-sequence order —
+    the fold-clock invariant the per-request LWW semantics hang on — and
+    the parallel scheduler's ticket→result map must stay bit-identical to
+    the serial one (determinism contract)."""
+    outs = {}
+    for workers in (None, 4):
+        c = _get_traced(workers)
+        eng = c.engine
+        eng.fold_trace.clear()
+        tickets = []
+        for i, (node, k) in enumerate(plan):
+            for j in range(k):
+                tickets.append(eng.submit("dfs_parent", node,
+                                          _x(float(i + j)),
+                                          t_send=float(i)))
+        res = eng.pump(1e9)
+        assert set(res) == set(tickets)
+        # the invariant: per store key, execution order == seal order
+        last = {}
+        for key, seq in eng.fold_trace:
+            assert last.get(key, -1) < seq, \
+                f"lane {key!r} executed seq {seq} after {last[key]}"
+            last[key] = seq
+        outs[workers] = [np.asarray(res[t].output) for t in tickets]
+    for a, b in zip(outs[None], outs[4]):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# reroute accounting is per-request-terminal
+# ---------------------------------------------------------------------------
+
+def test_reroute_counted_once_per_request():
+    """A request whose rerouted target ALSO dies moves again but is
+    counted once — pre-fix, each eviction sweep re-counted the whole
+    window and the reroute ledger drifted."""
+    c = _leaf_cluster()
+    eng = c.engine
+    eng.configure(window_ms=50.0)
+    base = eng.stats.reroutes
+    tks = [eng.submit("dfs_leaf", "edge", _x(float(i)), t_send=0.0)
+           for i in range(3)]
+    c.naming.mark_dead("edge")
+    eng.pump(0.0)                           # sweep only: nothing is due yet
+    assert eng.stats.reroutes - base == 3   # moved edge -> edge2
+    c.naming.mark_dead("edge2")
+    out = eng.pump(1e9)                     # second sweep + dispatch
+    assert set(out) == set(tks)
+    assert all(out[t].node == "edge3" for t in tks)
+    assert eng.stats.reroutes - base == 3   # the second move is NOT re-counted
+    assert eng.stats.dropped_dead == 0
