@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Static concurrency-contract checks (<10 s) — the pre-commit signal.
+#
+#   scripts/lint.sh
+#
+# 1. lockcheck: AST lock-discipline lint over src/ against the LOCK_ORDER
+#    declaration (out-of-order acquisitions, dispatch under _qlock, raw
+#    stats +=, blocking calls under non-leaf locks).
+# 2. lock_order --check: the docs/batched_engine.md hierarchy block must
+#    match the in-code spec (regenerate with `--write`).
+#
+# See docs/concurrency_checks.md.  scripts/verify.sh runs this first in
+# both modes.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m repro.analysis.lockcheck src/
+python -m repro.analysis.lock_order --check

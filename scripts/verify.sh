@@ -11,6 +11,10 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# static concurrency-contract checks first (both modes, <10 s): the
+# lock-discipline lint + the generated-docs drift check
+scripts/lint.sh
+
 if [ "${1:-}" = "--fast" ]; then
     python -m pytest -q -m tier0
 else

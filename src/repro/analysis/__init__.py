@@ -1,0 +1,24 @@
+"""Concurrency-contract analysis for the Enoki reproduction.
+
+Three pieces, one contract:
+
+- ``lock_order`` — the machine-readable ``LOCK_ORDER`` declaration: the
+  partial order over every lock in the serving stack (previously prose in
+  ``core/engine.py`` and ``docs/batched_engine.md``), plus the tables the
+  checkers share (guarded counters, dispatch/blocking call names).  The
+  hierarchy block in ``docs/batched_engine.md`` is generated from it.
+- ``lockcheck`` — the static half: an AST lint over ``src/`` that flags
+  out-of-order acquisitions (``with``-nesting plus an intramodule
+  call-graph approximation), device dispatches lexically under the
+  engine's queue lock, raw ``+=`` on shared counters, and blocking calls
+  under non-leaf locks.  Run as ``python -m repro.analysis.lockcheck src/``.
+- ``lockdep`` — the runtime half: ordered-lock wrappers the serving-stack
+  locks opt into.  When enabled (the concurrency test suites do, via a
+  conftest fixture) every acquire is checked against ``LOCK_ORDER`` with
+  the per-thread held set, and a cross-thread acquisition graph is
+  accumulated; cycles fail the test run.
+
+See ``docs/concurrency_checks.md`` for the contract and the suppression
+syntax.  This package must stay importable without ``repro.core`` (the
+core locks import ``lockdep`` at module load).
+"""

@@ -14,6 +14,7 @@ from typing import Any, Callable, List, Optional
 
 import jax
 
+from repro.analysis import lockdep
 from repro.checkpoint.serializer import deserialize_tree, serialize_tree
 
 
@@ -23,7 +24,7 @@ class CheckpointManager:
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
-        self._lock = threading.Lock()
+        self._lock = lockdep.make_lock("checkpoint.lock")
 
     # -- paths --------------------------------------------------------------
     def _path(self, step: int) -> str:

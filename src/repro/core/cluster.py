@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import lockdep
 from repro.configs.base import ReplicationPolicy
 from repro.core.engine import BatchedInvocationEngine
 from repro.core.faas import (FunctionSpec, VectorCodec,
@@ -85,7 +86,8 @@ class _Node:
     # read-dispatch-write of one invocation holds the lock across all
     # three so concurrent touches of one store node serialize)
     lock: threading.RLock = dataclasses.field(
-        default_factory=threading.RLock, repr=False, compare=False)
+        default_factory=lambda: lockdep.make_rlock("cluster.node_lock"),
+        repr=False, compare=False)
 
     def __post_init__(self):
         if self.clock is None:
@@ -100,7 +102,8 @@ class _DeliveryQueue:
     heap: List[Tuple[float, int, str, Store]] = dataclasses.field(
         default_factory=list)
     lock: threading.Lock = dataclasses.field(
-        default_factory=threading.Lock, repr=False, compare=False)
+        default_factory=lambda: lockdep.make_lock("cluster.delivery_lock"),
+        repr=False, compare=False)
 
 
 class Cluster:
@@ -116,7 +119,8 @@ class Cluster:
         self._queues: Dict[str, _DeliveryQueue] = {
             name: _DeliveryQueue() for name in self.nodes}
         self._seq = itertools.count()
-        self._repl_lock = threading.Lock()   # replication_bytes accounting
+        self._repl_lock = lockdep.make_lock(
+            "cluster.repl_lock")             # replication_bytes accounting
         self._measure = measure_compute
         self.replication_bytes = 0   # accounting for §Perf
         self.specs: Dict[str, FunctionSpec] = {}

@@ -110,6 +110,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import lockdep
+
 DEFAULT_BUCKETS = (1, 8, 64, 256)
 MAX_CALL_DEPTH = 32     # downstream-chain guard (cycles in calls/async_calls)
 MIN_PARALLEL_REQUESTS = 64      # cycles smaller than this run inline even
@@ -157,8 +159,9 @@ class _Cycle:
     hwm: Dict[str, float] = dataclasses.field(default_factory=dict)
     # (kg, store_node) -> latest apply time of a write this cycle
     repl: Dict[Tuple[str, str], float] = dataclasses.field(default_factory=dict)
-    lock: threading.Lock = dataclasses.field(default_factory=threading.Lock,
-                                             repr=False)
+    lock: threading.Lock = dataclasses.field(
+        default_factory=lambda: lockdep.make_lock("engine.cycle_state_lock"),
+        repr=False)
 
 
 @dataclasses.dataclass
@@ -217,10 +220,12 @@ class AtomicStats:
     threads (parallel pump workers, client submit threads, the serving
     loop).  ``inc`` is the one mutation path — a plain ``+=`` is a
     read-modify-write race under the executor pump and silently loses
-    counts.  The lock is a leaf in the lock hierarchy: nothing else is
-    ever acquired while holding it."""
+    counts (``lockcheck`` flags raw increments).  The lock is a leaf in
+    ``repro.analysis.lock_order``: nothing else is ever acquired while
+    holding it."""
     _lock: threading.Lock = dataclasses.field(
-        default_factory=threading.Lock, repr=False, compare=False)
+        default_factory=lambda: lockdep.make_lock("stats.lock"),
+        repr=False, compare=False)
 
     def inc(self, name: str, n: int = 1) -> int:
         with self._lock:
@@ -266,7 +271,7 @@ class _NodePool:
         self.workers = max(1, int(workers))
         self._execs: List[ThreadPoolExecutor] = []
         self._slot: Dict[str, int] = {}
-        self._lock = threading.Lock()
+        self._lock = lockdep.make_lock("engine.pool_lock")
 
     def submit(self, node: str, fn, *args):
         with self._lock:
@@ -310,12 +315,13 @@ class BatchedInvocationEngine:
         # (client, node, payload) triple is a constant: cache it (submit is
         # the per-request hot path of the background flusher)
         self._hops: Dict[Tuple[str, str, int], float] = {}
-        # lock hierarchy (outer to inner): _cycle_lock > _qlock > cluster
-        # node/queue locks > stats locks.  _qlock guards the queue state
-        # (_windows/_tickets/_ready) and is never held across a dispatch;
-        # _cycle_lock serializes flush cycles (all device dispatches)
-        self._qlock = threading.RLock()
-        self._cycle_lock = threading.RLock()
+        # lock order: declared in repro/analysis/lock_order.py (the single
+        # source both checkers and docs/batched_engine.md read).  _qlock
+        # guards the queue state (_windows/_tickets/_ready) and is never
+        # held across a dispatch; _cycle_lock serializes flush cycles
+        # (all device dispatches) and nests _qlock/node locks inside it
+        self._qlock = lockdep.make_rlock("engine.qlock")
+        self._cycle_lock = lockdep.make_rlock("engine.cycle_lock")
         self._pool: Optional[_NodePool] = None
         # cycles below this many requests run inline even with workers
         # set (handoff latency vs throughput trade); tests override it to
@@ -340,7 +346,7 @@ class BatchedInvocationEngine:
         # dispatch order respects per-store-node fold (seal) order
         self.trace_folds = False
         self.fold_trace: List[Tuple[str, int]] = []
-        self._trace_lock = threading.Lock()
+        self._trace_lock = lockdep.make_lock("engine.trace_lock")
 
     def _hop_ms(self, client: str, node: str, payload_bytes: int) -> float:
         key = (client, node, payload_bytes)
@@ -384,7 +390,10 @@ class BatchedInvocationEngine:
                     stale, self._pool = self._pool, None
                 self.workers = workers
             if stale is not None:
-                stale.shutdown()
+                # pool workers never take engine locks, so the join cannot
+                # deadlock; holding the cycle lock is the point (no cycle
+                # mid-dispatch may have its pool yanked)
+                stale.shutdown()    # lockcheck: ok[blocking-under-lock]
         return self
 
     def _get_pool(self) -> Optional[_NodePool]:
@@ -405,7 +414,8 @@ class BatchedInvocationEngine:
             with self._qlock:
                 pool, self._pool = self._pool, None
             if pool is not None:
-                pool.shutdown()
+                # same contract as use_workers: workers take no engine locks
+                pool.shutdown()     # lockcheck: ok[blocking-under-lock]
 
     # ------------------------------------------------------------------ clock
     def use_clock(self, clock: Optional[Callable[[], float]]
@@ -883,13 +893,17 @@ class BatchedInvocationEngine:
 
         wrote = any(k in ("set", "delete") for k, _ in ops)
         if kg is not None and wrote:
-            # defer to the cycle: ONE coalesced snapshot per (kg, node)
+            # defer to the cycle: ONE coalesced snapshot per (kg, node).
+            # The stats bump moves OUTSIDE cycle.lock: it takes the stats
+            # lock, and cycle.lock is a leaf in LOCK_ORDER (the checkers
+            # flag lock acquisition under a leaf)
             rkey = (kg, store_node)
             with cycle.lock:
-                if rkey in cycle.repl:
-                    self.stats.inc("replication_coalesced")
+                coalesced = rkey in cycle.repl
                 cycle.repl[rkey] = max(cycle.repl.get(rkey, -math.inf),
                                        max(t_applieds))
+            if coalesced:
+                self.stats.inc("replication_coalesced")
 
         # one transfer for the whole batch, then host-side row views
         ys_host = jax.tree.map(np.asarray, jax.device_get(ys))
@@ -906,7 +920,9 @@ class BatchedInvocationEngine:
             ops=list(ops), todo=todo, fires=fires, parents=list(parents))
 
 
-class _CycleRun:
+class _CycleRun:    # lockcheck: single-threaded — counters below are
+    # coordinator-thread-only: _seal/_process/_drop_fifo all run on the
+    # pump caller's thread (workers only _execute and enqueue to done_q)
     """One flush cycle's dataflow scheduler, driven by the pump caller's
     thread under the engine's cycle lock (the coordinator).
 

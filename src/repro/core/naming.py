@@ -13,6 +13,7 @@ import dataclasses
 import threading
 from typing import Dict, List, Optional, Set
 
+from repro.analysis import lockdep
 from repro.configs.base import ReplicationPolicy
 from repro.core.keygroup import KeygroupSpec
 
@@ -35,7 +36,7 @@ class NamingService:
     """Thread-safe control-plane registry."""
 
     def __init__(self) -> None:
-        self._lock = threading.Lock()
+        self._lock = lockdep.make_lock("naming.lock")   # leaf: dict ops only
         self._keygroups: Dict[str, KeygroupRecord] = {}
         self._functions: Dict[str, FunctionRecord] = {}
         self._nodes: Dict[str, dict] = {}

@@ -62,6 +62,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.analysis import lockdep
 from repro.core.cluster import Cluster, InvokeResult
 from repro.core.consistency import Session
 from repro.core.engine import AtomicStats
@@ -146,9 +147,11 @@ class Router:
         # them forever) and merged into the next fold's return
         self._claimed: Dict[int, InvokeResult] = {}
         # guards sessions/_inflight/_hedges; held for host-side folds only,
-        # never across an engine dispatch (lock hierarchy: router lock >
-        # engine cycle lock > engine queue lock)
-        self._lock = threading.RLock()
+        # never across an engine dispatch — pump/hedge submits release it
+        # first, so router.lock nests only engine.qlock (and, mid-cycle,
+        # is itself taken under the cycle lock on the on_ready delivery
+        # path).  Declared in repro/analysis/lock_order.py
+        self._lock = lockdep.make_rlock("router.lock")
 
     # ------------------------------------------------------------------ picks
     def candidates(self, fn_name: str) -> List[str]:

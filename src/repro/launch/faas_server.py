@@ -52,6 +52,7 @@ import time
 from concurrent import futures
 from typing import Any, Dict, List, Optional
 
+from repro.analysis import lockdep
 from repro.core.cluster import Cluster, InvokeResult
 from repro.core.engine import AtomicStats
 from repro.core.router import Router
@@ -123,13 +124,13 @@ class FaasServer:
         self.workers = workers
         # the ONE server-side lock: future table, orphaned results, and the
         # serving loop's deadline wake-ups.  Dispatches never run under it
-        self._cond = threading.Condition()
+        self._cond = lockdep.make_condition("server.cond")
         # serializes whole pump TURNS (router.pump/reconcile -> deliver ->
         # fail-lost): a ticket the router just folded is momentarily
         # untracked but undelivered, and a concurrent fail-lost pass in
         # that gap would fail a request that succeeded.  Ordered ABOVE
         # _cond; client submits never take it
-        self._pump_lock = threading.Lock()
+        self._pump_lock = lockdep.make_lock("server.pump_lock")
         self._futures: Dict[int, ServedRequest] = {}
         # bumped (under _cond) by every submit: the serving loop re-pumps
         # instead of sleeping when a submit landed DURING its pump turn —

@@ -30,6 +30,7 @@ import jax
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.analysis import lockdep
 from repro.configs.base import MeshConfig, ReplicationPolicy
 from repro.core.engine import AtomicStats
 from repro.core.keygroup import arena_new
@@ -93,7 +94,7 @@ class ElasticMembership:
         self._ckpt_mgrs: Dict[str, Any] = {}
         # outermost lock of a membership transition; cluster node/queue
         # locks nest inside it, and nothing here is called under them
-        self._lock = threading.RLock()
+        self._lock = lockdep.make_rlock("membership.lock")
 
     # ------------------------------------------------------------ checkpoints
     def _ckpt(self, node: str):

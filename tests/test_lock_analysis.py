@@ -1,0 +1,357 @@
+"""Tests for the concurrency-contract checkers.
+
+Static half (``repro.analysis.lockcheck``): every rule must flag its
+seeded-violation fixture, the suppression syntax must silence it, and —
+the acceptance bar — the REAL tree under ``src/repro`` must lint clean.
+
+Runtime half (``repro.analysis.lockdep``): ordered wrappers enforce the
+declared order at acquire time, the on_ready delta edges are legal, the
+condition-wait pattern works, distinct same-name instances are rejected,
+and a cross-thread A->B / B->A inversion is caught as a cycle in the
+acquisition graph even when each thread is locally consistent.
+
+Doc sync: the hierarchy block in ``docs/batched_engine.md`` is generated
+from ``lock_order`` and must not drift.
+"""
+from __future__ import annotations
+
+import pathlib
+import threading
+import textwrap
+
+import pytest
+
+from repro.analysis import lock_order, lockdep
+from repro.analysis.lockcheck import check_paths, check_source
+from repro.analysis.lockdep import LockOrderViolation
+
+pytestmark = pytest.mark.tier0  # fast pre-commit subset
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _rules(src: str):
+    return [f.rule for f in check_source(textwrap.dedent(src))]
+
+
+# ---------------------------------------------------------------------------
+# the spec itself
+# ---------------------------------------------------------------------------
+
+def test_lock_order_is_a_dag():
+    lock_order.assert_dag()     # raises on cycle / unknown / leaf out-edge
+
+
+def test_on_ready_delta_is_declared_not_reversed():
+    # the delta edges exist ...
+    assert lock_order.allowed("engine.cycle_lock", "router.lock")
+    assert lock_order.allowed("engine.cycle_lock", "server.cond")
+    # ... and the reverse direction (which would complete a deadlock
+    # cycle) does not
+    assert not lock_order.allowed("router.lock", "engine.cycle_lock")
+    assert not lock_order.allowed("server.cond", "engine.cycle_lock")
+
+
+def test_leaf_semantics():
+    assert lock_order.allowed("engine.cycle_lock", "stats.lock")
+    assert not lock_order.allowed("stats.lock", "engine.qlock")
+    assert not lock_order.allowed("engine.cycle_state_lock", "stats.lock")
+
+
+def test_transitive_closure():
+    # pump_lock reaches qlock only through router/cycle edges
+    assert lock_order.allowed("server.pump_lock", "engine.qlock")
+    assert not lock_order.allowed("engine.qlock", "server.pump_lock")
+
+
+# ---------------------------------------------------------------------------
+# static lint: seeded violations
+# ---------------------------------------------------------------------------
+
+def test_flags_inverted_acquisition():
+    assert _rules("""
+        class BatchedInvocationEngine:
+            def bad(self):
+                with self._qlock:
+                    with self._cycle_lock:
+                        pass
+    """) == ["order"]
+
+
+def test_flags_inversion_through_call_graph():
+    assert _rules("""
+        class BatchedInvocationEngine:
+            def helper(self):
+                with self._cycle_lock:
+                    pass
+            def bad(self):
+                with self._qlock:
+                    self.helper()
+    """) == ["order"]
+
+
+def test_flags_dispatch_under_qlock():
+    assert _rules("""
+        class BatchedInvocationEngine:
+            def bad(self, xs):
+                with self._qlock:
+                    return self._exec_group(xs)
+    """) == ["dispatch-under-qlock"]
+    assert _rules("""
+        import jax
+        class BatchedInvocationEngine:
+            def bad(self, xs):
+                with self._qlock:
+                    return jax.vmap(lambda x: x)(xs)
+    """) == ["dispatch-under-qlock"]
+
+
+def test_flags_raw_stats_increment():
+    assert _rules("""
+        class Router:
+            def bad(self):
+                self.stats.requests += 1
+    """) == ["stats-raw-increment"]
+
+
+def test_flags_blocking_under_cycle_lock():
+    assert _rules("""
+        import time
+        class BatchedInvocationEngine:
+            def bad(self):
+                with self._cycle_lock:
+                    time.sleep(0.1)
+    """) == ["blocking-under-lock"]
+
+
+def test_flags_future_result_under_router_lock():
+    assert _rules("""
+        class Router:
+            def bad(self, fut):
+                with self._lock:
+                    return fut.result(timeout=1.0)
+    """) == ["blocking-under-lock"]
+
+
+def test_condition_self_wait_is_exempt():
+    assert _rules("""
+        class FaasServer:
+            def ok(self):
+                with self._cond:
+                    self._cond.wait(0.1)
+    """) == []
+
+
+def test_flags_guarded_field_without_lock():
+    assert _rules("""
+        class FaasServer:
+            def bad(self):
+                self._submit_gen += 1
+            def ok(self):
+                with self._cond:
+                    self._submit_gen += 1
+    """) == ["guarded-field"]
+
+
+def test_flags_unlocked_shared_counter():
+    assert _rules("""
+        class Cluster:
+            def bad(self):
+                self.hits += 1
+    """) == ["shared-counter"]
+
+
+def test_flags_acquire_under_leaf_via_inc():
+    # the shape of the bug this PR fixed: AtomicStats.inc (which takes
+    # the stats lock) reached from under the per-cycle leaf lock
+    assert _rules("""
+        class AtomicStats:
+            def inc(self, name, n=1):
+                with self._lock:
+                    setattr(self, name, getattr(self, name) + n)
+        class BatchedInvocationEngine:
+            def _exec_chunk(self, cycle, rkey):
+                with cycle.lock:
+                    if rkey in cycle.repl:
+                        self.stats.inc("x")
+    """) == ["order"]
+
+
+# ---------------------------------------------------------------------------
+# static lint: suppressions
+# ---------------------------------------------------------------------------
+
+def test_line_suppression_silences_rule():
+    assert _rules("""
+        import time
+        class BatchedInvocationEngine:
+            def ok(self):
+                with self._cycle_lock:
+                    time.sleep(0.1)   # lockcheck: ok[blocking-under-lock]
+    """) == []
+
+
+def test_suppression_is_rule_specific():
+    assert _rules("""
+        import time
+        class BatchedInvocationEngine:
+            def bad(self):
+                with self._cycle_lock:
+                    time.sleep(0.1)   # lockcheck: ok[order]
+    """) == ["blocking-under-lock"]
+
+
+def test_single_threaded_class_annotation():
+    assert _rules("""
+        class Cluster:   # lockcheck: single-threaded
+            def ok(self):
+                self.hits += 1
+    """) == []
+
+
+# ---------------------------------------------------------------------------
+# the acceptance bar: the real tree is clean
+# ---------------------------------------------------------------------------
+
+def test_src_tree_is_clean():
+    findings = check_paths([str(REPO / "src" / "repro")])
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# docs sync
+# ---------------------------------------------------------------------------
+
+def test_docs_hierarchy_in_sync():
+    doc = REPO / "docs" / "batched_engine.md"
+    assert lock_order.check_docs(doc), (
+        "docs/batched_engine.md hierarchy block drifted from "
+        "lock_order.py — run `python -m repro.analysis.lock_order --write`")
+
+
+# ---------------------------------------------------------------------------
+# runtime validator
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def lockdep_session():
+    lockdep.enable()
+    try:
+        yield
+    finally:
+        lockdep.disable()
+
+
+def test_lockdep_disabled_returns_plain_primitives():
+    assert not lockdep.enabled()
+    lk = lockdep.make_lock("engine.qlock")
+    assert not isinstance(lk, lockdep.OrderedLock)
+    with lk:
+        pass
+
+
+def test_lockdep_rejects_inversion(lockdep_session):
+    q = lockdep.make_rlock("engine.qlock")
+    cyc = lockdep.make_rlock("engine.cycle_lock")
+    with cyc:       # declared direction: fine
+        with q:
+            pass
+    with pytest.raises(LockOrderViolation):
+        with q:
+            with cyc:
+                pass
+    assert lockdep.verify()     # also recorded for teardown checks
+
+
+def test_lockdep_allows_on_ready_delta(lockdep_session):
+    cyc = lockdep.make_rlock("engine.cycle_lock")
+    router = lockdep.make_rlock("router.lock")
+    cond = lockdep.make_condition("server.cond")
+    with cyc:
+        with router:
+            pass
+        with cond:
+            pass
+    assert lockdep.verify() == []
+
+
+def test_lockdep_rejects_acquire_under_leaf(lockdep_session):
+    stats = lockdep.make_lock("stats.lock")
+    q = lockdep.make_rlock("engine.qlock")
+    with pytest.raises(LockOrderViolation):
+        with stats:
+            with q:
+                pass
+
+
+def test_lockdep_rejects_peer_instance_nesting(lockdep_session):
+    n1 = lockdep.make_rlock("cluster.node_lock")
+    n2 = lockdep.make_rlock("cluster.node_lock")
+    with n1:        # reentrancy on the SAME instance is fine
+        with n1:
+            pass
+    with pytest.raises(LockOrderViolation):
+        with n1:
+            with n2:
+                pass
+
+
+def test_lockdep_condition_wait_releases_held_entry(lockdep_session):
+    cond = lockdep.make_condition("server.cond")
+    with cond:
+        assert cond.wait(0.01) is False     # timeout, no violation
+        with lockdep.make_rlock("router.lock"):
+            pass
+    assert lockdep.verify() == []
+
+
+def test_lockdep_cross_thread_cycle_detected():
+    # two record-only locks, each thread locally consistent, jointly a
+    # deadlock: the acquisition graph must report the cycle
+    lockdep.enable(raise_on_violation=False)
+    try:
+        a = lockdep.make_lock("test.alpha")
+        b = lockdep.make_lock("test.beta")
+
+        def t1():
+            with a:
+                with b:
+                    pass
+
+        def t2():
+            with b:
+                with a:
+                    pass
+
+        for fn in (t1, t2):
+            th = threading.Thread(target=fn)
+            th.start()
+            th.join()
+        problems = lockdep.verify()
+    finally:
+        lockdep.disable()
+    assert any("cycle" in p for p in problems), problems
+
+
+def test_lockdep_instruments_a_real_engine(lockdep_session):
+    # an engine built while enabled gets ordered locks and a tiny
+    # submit/flush pass stays violation-free
+    import numpy as np
+    from repro.core import Cluster, enoki_function, get_function
+
+    @enoki_function(name="lkd_probe_acc", keygroups=["lkdkg"],
+                    codec_width=4)
+    def lkd_probe_acc(kv, x):
+        cur, found = kv.get("t")
+        kv.set("t", cur + x)
+        return cur[:1] + x[:1]
+
+    c = Cluster({"edge": "edge"}, measure_compute=False)
+    assert isinstance(c.engine._qlock, lockdep.OrderedRLock)
+    c.deploy(get_function("lkd_probe_acc"), ["edge"])
+    c.engine.configure(window_ms=5.0)
+    tk = c.engine.submit("lkd_probe_acc", "edge",
+                         np.ones(4, np.float32))
+    res = c.engine.flush()
+    assert tk in res
+    assert lockdep.verify() == []
