@@ -259,9 +259,102 @@ def run_churn_serving(epochs: int = 3, writes_per_epoch: int = 16,
     }
 
 
+# ---------------------------------------------------------------------------
+# Merge-path mode: the device-resident delivery merge, old vs new.
+#
+# ``run_merge_path`` pits the retired per-snapshot path (K sequential
+# ``merge_stores_jit`` dispatches per delivery batch) against the fused
+# multi-way merge (ONE ``merge_snapshots_fused`` dispatch folding all K)
+# on slot-aligned arenas — the exact shapes ``_deliver_until`` serves.
+# Byte-identical results are asserted before timing; throughput uses the
+# stabilized interleaved-repeats + median-of-K methodology.
+# ---------------------------------------------------------------------------
+
+def _aligned_replicas(slots: int, width: int, count: int, seed: int = 0):
+    """``count`` slot-aligned arenas sharing one canonical layout, with
+    per-replica versions/values so both LWW win directions occur."""
+    import jax
+    from repro.core.store import store_new, store_assign_slots
+    from repro.core.versioning import MAX_NODES
+    rng = np.random.default_rng(seed)
+    layout = {1000 + i: i for i in range(slots)}
+    out = []
+    for r in range(count):
+        base, ok = store_assign_slots(store_new(slots, width, MAX_NODES),
+                                      layout)
+        assert ok
+        out.append(base._replace(
+            values=jnp.asarray(rng.normal(size=(slots, width)), jnp.float32),
+            lengths=jnp.full((slots,), width, jnp.int32),
+            versions=jnp.asarray(rng.integers(1, 1000, slots), jnp.int32),
+            vv=jnp.asarray(rng.integers(0, 50, MAX_NODES), jnp.int32)))
+    jax.block_until_ready(out)
+    return out
+
+
+def run_merge_path(slots: int = 64, width: int = 8, k: int = 8,
+                   iters: int = 100, repeats: int = 3):
+    """Delivery-merge throughput, per-snapshot vs fused K-way (ops =
+    snapshot merges applied).  Returns the JSON-ready result dict."""
+    import jax
+    from benchmarks.common import interleaved_repeats, median_ops
+    from repro.core.store import (arena_clone, merge_snapshots_fused,
+                                  merge_stores_jit, stores_equal)
+
+    arenas = _aligned_replicas(slots, width, k + 1)
+    acc, snaps = arenas[0], tuple(arenas[1:])
+
+    # correctness first: one fused dispatch == K sequential merges, bitwise
+    ref = arena_clone(acc)
+    for s in snaps:
+        ref = merge_stores_jit(ref, s)
+    fused_out = merge_snapshots_fused(arena_clone(acc), snaps, aligned=True)
+    assert stores_equal(fused_out, ref), "fused merge diverged from sequential"
+
+    def per_snapshot() -> int:
+        s = arena_clone(acc)
+        for _ in range(iters):
+            for snap in snaps:
+                s = merge_stores_jit(s, snap)
+        jax.block_until_ready(s)
+        return iters * k
+
+    def fused() -> int:
+        s = arena_clone(acc)
+        for _ in range(iters):
+            s = merge_snapshots_fused(s, snaps, aligned=True)
+        jax.block_until_ready(s)
+        return iters * k
+
+    med = median_ops(interleaved_repeats(
+        {"per_snapshot": per_snapshot, "fused": fused},
+        repeats=repeats, warmup=1))
+    return {
+        "slots": slots, "value_width": width, "k": k, "iters": iters,
+        "per_snapshot_merges_per_s": round(med["per_snapshot"], 1),
+        "fused_merges_per_s": round(med["fused"], 1),
+        "speedup": round(med["fused"] / med["per_snapshot"], 2),
+        "bit_identical": True,      # asserted above before timing
+    }
+
+
 def main():
     import sys
     from benchmarks.common import print_table
+    if "--merge-path" in sys.argv:
+        import json
+        import os
+        result = run_merge_path()
+        print_table([result], "Fig 6 merge path — per-snapshot vs fused")
+        out_dir = os.path.abspath(
+            os.path.join(os.path.dirname(__file__), "..", "artifacts"))
+        os.makedirs(out_dir, exist_ok=True)
+        out = os.path.join(out_dir, "fig6_merge_path.json")
+        with open(out, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {out}")
+        assert result["speedup"] >= 2.0, result
+        return [result]
     if "--churn" in sys.argv:
         rows, summary = run_churn()
         print_table(rows, "Fig 6 churn — kill/restore a replica per epoch")

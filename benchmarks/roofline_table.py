@@ -60,6 +60,75 @@ def table(mesh: str = "16x16", art_dir: Optional[str] = None) -> str:
     return "\n".join(out)
 
 
+def serving_costs(buckets=(1, 8, 64), merge_ks=(1, 2, 4, 8)) -> List[Dict]:
+    """Cost the DEVICE-RESIDENT serving path straight from the deployed
+    entry points (no artifacts needed): the batched scan-fold
+    (``bstep.jit_scan``) per batch bucket, and the coalesced K-way
+    delivery merge (``store.merge_many_fn``) per snapshot bucket, both
+    slot-aligned and fallback.  Each row is the walker's trip-count-aware
+    HLO cost of ONE dispatch — the unit the warm serving loop repeats.
+
+    Jax is imported lazily so the module stays import-light for the
+    artifact-only path.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import Cluster, enoki_function
+    from repro.core.faas import get_function, registry
+    from repro.core.store import merge_many_fn
+    from repro.launch.roofline import abstractify, analyze_jit
+
+    if "roofline_acc" not in registry():
+        @enoki_function(name="roofline_acc", keygroups=["rooflinekg"],
+                        codec_width=8)
+        def roofline_acc(kv, x):
+            cur, _ = kv.get("acc")
+            kv.set("acc", cur + x)
+            return cur + x
+
+    c = Cluster({"edge": "edge"}, measure_compute=False)
+    c.deploy(get_function("roofline_acc"), ["edge"],
+             example_input=jnp.ones((8,), jnp.float32))
+    nd = c.nodes["edge"]
+    bh = nd.batched_handlers["roofline_acc"]
+    store, clock = nd.stores["rooflinekg"], nd.clock
+
+    def row(program, size, a):
+        return {"program": program, "size": size,
+                "flops": a["flops_per_device"],
+                "bytes": a["bytes_per_device"],
+                "unknown_trips": a["unknown_trip_counts"]}
+
+    rows = []
+    s_store, s_clock = abstractify(store), abstractify(clock)
+    for b in buckets:
+        xs = abstractify(jnp.zeros((b, 8), jnp.float32))
+        valid = abstractify(jnp.zeros((b,), bool))
+        rows.append(row("jit_scan", f"bucket={b}",
+                        analyze_jit(bh.jit_scan, s_store, s_clock, xs,
+                                    valid)))
+    for aligned in (True, False):
+        name = "merge/aligned" if aligned else "merge/fallback"
+        for k in merge_ks:
+            snaps = tuple(abstractify(store) for _ in range(k))
+            rows.append(row(name, f"K={k}",
+                            analyze_jit(merge_many_fn(aligned), s_store,
+                                        snaps)))
+    return rows
+
+
+def serving_table(rows: Optional[List[Dict]] = None) -> str:
+    rows = serving_costs() if rows is None else rows
+    cols = list(rows[0].keys())
+    out = ["| " + " | ".join(cols) + " |",
+           "|" + "|".join(["---"] * len(cols)) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(
+            f"{r[c]:.3e}" if isinstance(r[c], float) else str(r[c])
+            for c in cols) + " |")
+    return "\n".join(out)
+
+
 def main():
     print("\n## Roofline baseline — single-pod 16×16 (terms in s/step, "
           "per-chip)")
@@ -73,6 +142,12 @@ def main():
         print(f"\nworst roofline fraction: {worst['arch']}×{worst['shape']} "
               f"({100*worst['roofline']['roofline_fraction']:.2f}%)")
         print(f"most collective-heavy: {coll['arch']}×{coll['shape']}")
+    print("\n## Device-resident serving path — per-dispatch HLO cost "
+          "(current backend)")
+    try:
+        print(serving_table())
+    except Exception as exc:        # artifact-only environments (no jax)
+        print(f"(serving-path costing unavailable: {exc})")
     return recs
 
 

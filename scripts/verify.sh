@@ -163,4 +163,49 @@ assert dt < 10.0, f"dataflow smoke too slow: {dt:.1f}s"
 print(f"dataflow smoke OK: fast lanes streamed past the straggler, "
       f"workers=4 results == workers=1 ({dt:.1f}s)")
 EOF
+
+# Merge-path smoke: the device-resident delivery merge end to end — deploy
+# pre-assigns canonical slots, K pending snapshots fold in ONE fused
+# slot-aligned dispatch, and the merged replica is byte-identical
+# (version vectors included) to the sequential per-snapshot baseline.
+# Budget: well under 10 s.
+python - <<'EOF'
+import time
+import numpy as np
+from repro.core import Cluster, enoki_function, get_function
+from repro.core.store import arena_clone, merge_stores_jit, stores_equal
+
+@enoki_function(name="vy_merge_acc", keygroups=["vymkg"], codec_width=8)
+def vy_merge_acc(kv, x):
+    cur, found = kv.get("total")
+    kv.set("total", cur + x)
+    return cur[:1] + x[:1]
+
+t0 = time.perf_counter()
+c = Cluster({"edge": "edge", "edge2": "edge", "cloud": "cloud"},
+            measure_compute=False)
+c.deploy(get_function("vy_merge_acc"), ["edge", "edge2"])
+assert c._aligned.get("vymkg") is True, "deploy must pre-assign slots"
+x = np.ones(8, np.float32)
+K = 5
+for i in range(K):
+    c.invoke("vy_merge_acc", "edge", x, t_send=i * 10.0)
+
+with c._queues["edge2"].lock:
+    pending = sorted(c._queues["edge2"].heap, key=lambda e: (e[0], e[1]))
+assert len(pending) == K, len(pending)
+baseline = arena_clone(c.nodes["edge2"].stores["vymkg"])
+for _, _, kg, snap in pending:
+    baseline = merge_stores_jit(baseline, snap)
+
+d0, a0 = c.stats.merge_dispatches, c.stats.merge_aligned
+c.flush_replication()
+assert c.stats.merge_dispatches - d0 == 1, "K snapshots != one dispatch"
+assert c.stats.merge_aligned - a0 == 1, "fallback merge on an aligned kg"
+assert stores_equal(c.nodes["edge2"].stores["vymkg"], baseline)
+dt = time.perf_counter() - t0
+assert dt < 10.0, f"merge-path smoke too slow: {dt:.1f}s"
+print(f"merge-path smoke OK: {K} snapshots in one aligned dispatch, "
+      f"byte-identical to sequential ({dt:.1f}s)")
+EOF
 echo "verify OK"

@@ -170,7 +170,8 @@ CLASS_LOCK_ATTRS: Dict[str, str] = {
 #: across a dispatch; ``submit`` would wait on the flush in flight).
 DISPATCH_CALL_NAMES: FrozenSet[str] = frozenset({
     "dispatch", "invoke", "invoke_batch", "pump", "flush", "_run_cycle",
-    "merge_stores_jit", "block_until_ready", "device_get", "device_put",
+    "merge_stores_jit", "merge_snapshots_fused", "arena_clone",
+    "block_until_ready", "device_get", "device_put",
     "jit",
 })
 DISPATCH_CALL_PREFIXES: Tuple[str, ...] = ("_exec_",)

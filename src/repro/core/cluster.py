@@ -40,13 +40,14 @@ import numpy as np
 
 from repro.analysis import lockdep
 from repro.configs.base import ReplicationPolicy
-from repro.core.engine import BatchedInvocationEngine
+from repro.core.engine import AtomicStats, BatchedInvocationEngine
 from repro.core.faas import (FunctionSpec, VectorCodec,
                              compile_batched_handler, compile_handler)
 from repro.core.keygroup import KeygroupSpec, arena_new
 from repro.core.naming import NamingService
 from repro.core.network import NetworkModel, paper_topology
-from repro.core.store import Store, merge_stores, merge_stores_jit
+from repro.core.store import (Store, arena_clone, donation_enabled,
+                              merge_snapshots_fused, store_assign_slots)
 from repro.core.versioning import MAX_NODES
 
 
@@ -68,6 +69,17 @@ class InvokeResult:
     kv_ops: List[Tuple[str, int]]
     node: str
     chain: List[str] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class ClusterStats(AtomicStats):
+    """Delivery-merge accounting — the dispatch-count probe the fused-merge
+    tests and the verify smoke assert against.  Mutate via ``inc`` only
+    (``stats.lock`` is a leaf in the lock order, safe under node locks)."""
+    merge_dispatches: int = 0   # fused delivery merges (ONE device dispatch each)
+    merge_snapshots: int = 0    # queued snapshots folded by those dispatches
+    merge_aligned: int = 0      # dispatches that took the slot-aligned kernel
+    merge_fallback: int = 0     # dispatches on the O(S^2) merge_stores body
 
 
 @dataclasses.dataclass
@@ -123,8 +135,14 @@ class Cluster:
             "cluster.repl_lock")             # replication_bytes accounting
         self._measure = measure_compute
         self.replication_bytes = 0   # accounting for §Perf
+        self.stats = ClusterStats()
         self.specs: Dict[str, FunctionSpec] = {}
         self.policies: Dict[str, KeygroupSpec] = {}
+        # canonical key->slot layout per keygroup (deploy-time, grows
+        # monotonically) and whether every replica still carries it; an
+        # unaligned keygroup PERMANENTLY uses the O(S^2) fallback merge
+        self._slot_maps: Dict[str, Dict[int, int]] = {}
+        self._aligned: Dict[str, bool] = {}
         self.engine = BatchedInvocationEngine(self)
 
     # ------------------------------------------------------------------ deploy
@@ -141,14 +159,30 @@ class Cluster:
         if node in existing:
             return
         if existing:
-            # replicate current contents from any live replica
+            # replicate current contents from any live replica — as a
+            # CLONE: replicas must never share arena buffers, or a donated
+            # fold at one node would invalidate the other's store (TPU/GPU)
             src = next(iter(existing))
-            nd.stores[spec.name] = self.nodes[src].stores[spec.name]
+            with self.nodes[src].lock:
+                snapshot = self.nodes[src].stores[spec.name]
+            nd.stores[spec.name] = arena_clone(snapshot)
         else:
-            nd.stores[spec.name] = arena_new(
-                dataclasses.replace(spec, value_width=spec.value_width),
-                MAX_NODES)
+            nd.stores[spec.name] = self.blank_arena(spec.name, spec)
         self.naming.add_replica(spec.name, node)
+
+    def blank_arena(self, kg: str, kspec: Optional[KeygroupSpec] = None
+                    ) -> Store:
+        """A fresh arena for ``kg`` with the keygroup's canonical slot
+        layout pre-applied.  Restores/rebalances (runtime/elastic,
+        runtime/failure) MUST use this instead of a raw ``arena_new`` so a
+        rebuilt replica stays slot-aligned with its peers."""
+        kspec = kspec or self.policies[kg]
+        arena = arena_new(kspec, MAX_NODES)
+        amap = self._slot_maps.get(kg)
+        if amap:
+            arena, ok = store_assign_slots(arena, amap)
+            assert ok, kg   # fresh arena: the layout always applies
+        return arena
 
     def deploy(self, spec: FunctionSpec, nodes: List[str],
                policy: ReplicationPolicy = ReplicationPolicy.REPLICATED,
@@ -183,6 +217,52 @@ class Cluster:
                 nd.compute_ms[spec.name] = self._measure_compute(spec, nd, example)
             else:
                 nd.compute_ms[spec.name] = 0.0
+        if spec.keygroups:
+            # canonical slot pre-assignment: the handler's key set is
+            # static (literal strings hashed at trace time), so stamp it
+            # into every replica now — delivery merges then take the
+            # elementwise slot-aligned kernel instead of the O(S^2) probe
+            bh = self.nodes[nodes[0]].batched_handlers[spec.name]
+            self._register_keys(spec.keygroups[0],
+                                getattr(bh, "key_hashes", ()))
+
+    def _register_keys(self, kg: str, hashes) -> None:
+        """Assign each new key hash the next free canonical slot and apply
+        the layout to every replica of ``kg`` (``store_assign_slots``).
+
+        If the layout cannot apply — arena overflow, or a dynamic write
+        already claimed a conflicting slot — the keygroup permanently
+        falls back to the layout-agnostic ``merge_stores`` path:
+        correctness never depends on alignment, only the merge cost does.
+        """
+        hashes = tuple(dict.fromkeys(int(h) for h in hashes))
+        if not hashes or self._aligned.get(kg) is False:
+            return
+        kspec = self.policies.get(kg)
+        slots = kspec.slots if kspec else 64
+        amap = self._slot_maps.setdefault(kg, {})
+        fresh = [h for h in hashes if h not in amap]
+        if len(amap) + len(fresh) > slots:
+            self._aligned[kg] = False   # more static keys than slots
+            return
+        used = set(amap.values())
+        nxt = 0
+        for h in fresh:
+            while nxt in used:
+                nxt += 1
+            amap[h] = nxt
+            used.add(nxt)
+        new = {h: amap[h] for h in fresh}
+        ok_all = True
+        for node in self.naming.replicas_of(kg):
+            nd = self.nodes[node]
+            with nd.lock:
+                arena, ok = store_assign_slots(nd.stores[kg], new)
+                if not ok:
+                    ok_all = False
+                    break
+                nd.stores[kg] = arena
+        self._aligned[kg] = ok_all
 
     def _cloud_node(self) -> str:
         for n, nd in self.nodes.items():
@@ -219,9 +299,19 @@ class Cluster:
         """Apply all replication deliveries for ``node`` with arrival <= t,
         in (arrival, seq) order — network delivery order, so a later snapshot
         is always merged after an earlier one regardless of how the pending
-        heap happens to be laid out.  Thread-safe: only ``node``'s own lock
-        and queue lock are taken, so deliveries to different nodes run
-        concurrently under the parallel pump."""
+        heap happens to be laid out.
+
+        The K due snapshots of each keygroup fold with ONE fused device
+        dispatch (``merge_snapshots_fused``: a ``lax.scan`` over the
+        stacked snapshots) instead of K sequential jit calls under the
+        node lock — on the slot-aligned elementwise kernel when the
+        keygroup's canonical layout held up, on the O(S²) ``merge_stores``
+        body otherwise.  Either way the result is bit-identical to the
+        old per-snapshot loop (the scan folds in the same order).
+
+        Thread-safe: only ``node``'s own lock and queue lock are taken, so
+        deliveries to different nodes run concurrently under the parallel
+        pump."""
         nd = self.nodes[node]
         q = self._queues[node]
         with nd.lock:
@@ -234,10 +324,19 @@ class Cluster:
                 # later heappush
                 heapq.heapify(keep)
                 q.heap = keep
+            per_kg: Dict[str, List[Store]] = {}
             for arrival, _, kg, snapshot in sorted(due, key=lambda e: e[:2]):
                 if kg not in nd.stores:
                     continue    # replica crashed away mid-flight: stale
-                nd.stores[kg] = merge_stores_jit(nd.stores[kg], snapshot)
+                per_kg.setdefault(kg, []).append(snapshot)
+            for kg, snaps in per_kg.items():
+                aligned = self._aligned.get(kg, False)
+                nd.stores[kg] = merge_snapshots_fused(
+                    nd.stores[kg], snaps, aligned=aligned)
+                self.stats.inc("merge_dispatches")
+                self.stats.inc("merge_snapshots", len(snaps))
+                self.stats.inc("merge_aligned" if aligned
+                               else "merge_fallback")
 
     def _schedule_replication(self, kg: str, source: str, t_apply: float) -> None:
         spec = self.policies[kg]
@@ -245,6 +344,13 @@ class Cluster:
             return
         with self.nodes[source].lock:
             snapshot = self.nodes[source].stores[kg]
+            if donation_enabled():
+                # a queued snapshot must never alias the live arena: the
+                # source's next fold and the target's fused merge DONATE
+                # their arena argument on TPU/GPU, which would invalidate
+                # every queued reference.  On CPU donation is a no-op and
+                # the immutable arena is shared for free.
+                snapshot = arena_clone(snapshot)
         nbytes = sum(int(np.prod(x.shape)) * x.dtype.itemsize
                      for x in snapshot[:4])
         alive = set(self.naming.alive_nodes())

@@ -100,6 +100,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 import math
 import queue
 import threading
@@ -113,6 +114,16 @@ import numpy as np
 from repro.analysis import lockdep
 
 DEFAULT_BUCKETS = (1, 8, 64, 256)
+
+
+@functools.lru_cache(maxsize=None)
+def _valid_mask(bucket: int, n: int) -> jnp.ndarray:
+    """Device-resident bucket-padding mask for ``n`` valid requests in a
+    ``bucket``-sized chunk, cached process-wide: warm chunks stop
+    allocating and transferring a fresh (bucket,) bool array per dispatch
+    (shape pinning — jit's cache keys on the shape, the VALUES here are a
+    bounded set too)."""
+    return jnp.asarray(np.arange(bucket) < n)
 MAX_CALL_DEPTH = 32     # downstream-chain guard (cycles in calls/async_calls)
 MIN_PARALLEL_REQUESTS = 64      # cycles smaller than this run inline even
                                 # with workers set: executor handoff adds
@@ -323,6 +334,13 @@ class BatchedInvocationEngine:
         self._qlock = lockdep.make_rlock("engine.qlock")
         self._cycle_lock = lockdep.make_rlock("engine.cycle_lock")
         self._pool: Optional[_NodePool] = None
+        # persistent host staging buffers for chunk stacking, keyed
+        # (bucket, leaf index, leaf shape, dtype) and THREAD-LOCAL: the
+        # parallel pump's lanes never share one, and a buffer is free for
+        # reuse the moment its chunk dispatched (jnp.asarray copies host
+        # memory into a fresh device buffer).  Warm cycles therefore make
+        # zero fresh staging allocations (see tests/test_perf_paths.py)
+        self._staging = threading.local()
         # cycles below this many requests run inline even with workers
         # set (handoff latency vs throughput trade); tests override it to
         # force the pool path on small streams
@@ -795,6 +813,102 @@ class BatchedInvocationEngine:
                 return b
         return n  # chunking caps n at the largest bucket already
 
+    def _stage_chunk(self, xs, bucket: int):
+        """Stack per-request host inputs into PERSISTENT per-(bucket, leaf)
+        staging buffers — the np.stack/np.concatenate of the old path
+        allocated fresh host arrays on every chunk.  Buffers live in
+        thread-local storage (the parallel pump's lanes never share one)
+        and are safe to reuse the moment the chunk dispatched: the
+        ``jnp.asarray`` on the dispatch path copies host memory into a
+        fresh device buffer before this thread stages again.  Padded slots
+        repeat the first row, exactly like the old path."""
+        n = len(xs)
+        leaves0, treedef = jax.tree_util.tree_flatten(xs[0])
+        bufs = getattr(self._staging, "bufs", None)
+        if bufs is None:
+            bufs = self._staging.bufs = {}
+        flat = [leaves0] + [jax.tree_util.tree_flatten(x)[0]
+                            for x in xs[1:]]
+        out = []
+        for j, leaf0 in enumerate(leaves0):
+            a0 = np.asarray(leaf0)
+            key = (bucket, j, a0.shape, a0.dtype.str)
+            buf = bufs.get(key)
+            if buf is None:
+                buf = bufs[key] = np.empty((bucket,) + a0.shape, a0.dtype)
+            buf[0] = a0
+            for i in range(1, n):
+                buf[i] = flat[i][j]
+            if bucket > n:
+                buf[n:] = buf[0]
+            out.append(buf)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def prewarm(self, buckets: Optional[Sequence[int]] = None,
+                merge_ks: Sequence[int] = (1, 2, 4, 8)) -> int:
+        """Pre-trace every (bucket × keygroup-geometry) serving shape so
+        warm flush cycles hit ZERO jit compilations (the shape-pinning
+        half of the device-resident store path; tests/test_perf_paths.py
+        asserts the zero).
+
+        Each deployed batched handler EXECUTES once per bucket against a
+        throwaway zeroed clone of its store state — ``lower().compile()``
+        would not populate jit's call cache, so the handlers really run —
+        and the fused delivery-merge entry runs once per REPLICATED
+        keygroup per K bucket in ``merge_ks``.  Returns the number of
+        warm-up executions issued.  Call after ``deploy`` and before
+        serving; safe to call again after later deploys."""
+        from repro.configs.base import ReplicationPolicy
+        from repro.core.store import merge_snapshots_fused
+
+        c = self.cluster
+        count = 0
+        with self._cycle_lock:
+            for node, nd in c.nodes.items():
+                for fn, bh in nd.batched_handlers.items():
+                    example = getattr(bh, "example", None)
+                    if example is None:
+                        continue    # test double without deploy metadata
+                    spec = c.specs[fn]
+                    kg, store_node, _ = c._resolve_placement(spec, node)
+                    for b in (buckets or self.buckets):
+                        xs_dev = jax.tree.map(
+                            jnp.asarray, self._stage_chunk([example] * b, b))
+                        if kg is not None:
+                            snd = c.nodes[store_node]
+                            with snd.lock:
+                                store, clock = snd.stores[kg], snd.clock
+                            scratch = jax.tree.map(jnp.zeros_like, store)
+                            out = bh(scratch, clock, xs_dev,
+                                     _valid_mask(b, b), independent=False)
+                        else:
+                            from repro.core.keygroup import KeygroupSpec, arena_new
+                            from repro.core.versioning import MAX_NODES
+                            scratch = arena_new(
+                                KeygroupSpec(name="_tmp",
+                                             value_width=spec.codec_width),
+                                MAX_NODES)
+                            out = bh(scratch, nd.clock, xs_dev,
+                                     _valid_mask(b, b), independent=True)
+                        jax.block_until_ready(out[:3])
+                        count += 1
+            for kg_name, kspec in c.policies.items():
+                if kspec.policy != ReplicationPolicy.REPLICATED:
+                    continue
+                replicas = c.naming.replicas_of(kg_name)
+                if not replicas:
+                    continue
+                node0 = next(iter(replicas))
+                with c.nodes[node0].lock:
+                    proto = c.nodes[node0].stores[kg_name]
+                aligned = c._aligned.get(kg_name, False)
+                for k in merge_ks:
+                    acc = jax.tree.map(jnp.zeros_like, proto)
+                    jax.block_until_ready(merge_snapshots_fused(
+                        acc, (proto,) * k, aligned=aligned))
+                    count += 1
+        return count
+
     def _exec_chunk(self, fn_name: str, node: str, xs, t_sends, client: str,
                     payload_bytes: int, floor: Optional[float], cycle: _Cycle,
                     depth: int, parents,
@@ -855,15 +969,13 @@ class BatchedInvocationEngine:
         # pad to the bucket and run the one batched dispatch (host-side
         # numpy staging: jnp.stack over per-request device arrays costs more
         # than the dispatch itself).  Stacking is per pytree leaf so tuple/
-        # dict handler inputs keep their structure, exactly as with invoke.
+        # dict handler inputs keep their structure, exactly as with invoke;
+        # the staging buffers and the padding mask are persistent (see
+        # _stage_chunk/_valid_mask) so a warm chunk allocates nothing fresh
+        # on the host
         bucket = self._bucket(n)
-        xs_host = jax.tree.map(
-            lambda *leaves: np.stack([np.asarray(l) for l in leaves]), *xs)
-        if bucket > n:
-            xs_host = jax.tree.map(
-                lambda a: np.concatenate(
-                    [a, np.repeat(a[:1], bucket - n, axis=0)]), xs_host)
-        valid = np.arange(bucket) < n
+        xs_host = self._stage_chunk(xs, bucket)
+        valid = _valid_mask(bucket, n)
 
         if kg is not None:
             # hold the STORE node's lock across read-dispatch-write so the
@@ -874,7 +986,7 @@ class BatchedInvocationEngine:
                 store, clock = snd.stores[kg], snd.clock
                 new_store, new_clock, ys, ops = bhandler(
                     store, clock, jax.tree.map(jnp.asarray, xs_host),
-                    jnp.asarray(valid), independent=False)
+                    valid, independent=False)
                 snd.stores[kg] = new_store
                 snd.clock = new_clock
         else:
@@ -884,7 +996,7 @@ class BatchedInvocationEngine:
             clock = nd.clock
             new_store, new_clock, ys, ops = bhandler(
                 store, clock, jax.tree.map(jnp.asarray, xs_host),
-                jnp.asarray(valid), independent=True)
+                valid, independent=True)
 
         # per-request timeline: identical charges to Cluster.invoke
         compute = nd.compute_ms.get(fn_name, 0.0)

@@ -37,8 +37,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.store import (Store, kv_delete, kv_get, kv_scan, kv_set,
-                              store_select)
+from repro.core.store import (Store, donate_store_argnums, kv_delete, kv_get,
+                              kv_scan, kv_set, store_select)
 from repro.core.versioning import fnv1a
 
 
@@ -102,6 +102,10 @@ class KV:
         self._node_id = node_id
         self._codec = codec
         self.ops: List[Tuple[str, int]] = []   # (kind, payload_bytes)
+        # every key hash the handler touches — static (keys are literal
+        # strings hashed at trace time), so one trace enumerates the full
+        # key set; deploy uses it for canonical slot pre-assignment
+        self.key_hashes: List[int] = []
 
     # -- paper API ----------------------------------------------------------
     def get(self, key: str):
@@ -110,6 +114,7 @@ class KV:
         val = self._codec.decode(row, length)
         nbytes = int(np.dtype(np.float32).itemsize) * self._codec.width
         self.ops.append(("get", nbytes))
+        self.key_hashes.append(h)
         return val, found
 
     def set(self, key: str, val) -> None:
@@ -118,6 +123,7 @@ class KV:
         self._store, self._clock, ok = kv_set(
             self._store, h, row, length, self._clock, self._node_id)
         self.ops.append(("set", int(row.nbytes)))
+        self.key_hashes.append(h)
 
     def scan(self, keys: Sequence[str]):
         hashes = [fnv1a(k) for k in keys]
@@ -125,6 +131,7 @@ class KV:
         idx = jnp.arange(vals.shape[1])[None, :]
         vals = jnp.where(idx < lengths[:, None], vals, 0.0)
         self.ops.append(("scan", int(vals.nbytes)))
+        self.key_hashes.extend(hashes)
         return vals, founds
 
     def delete(self, key: str) -> None:
@@ -132,6 +139,7 @@ class KV:
         self._store, self._clock, _ = kv_delete(
             self._store, h, self._clock, self._node_id)
         self.ops.append(("delete", 0))
+        self.key_hashes.append(h)
 
     # -- plumbing -------------------------------------------------------------
     @property
@@ -191,12 +199,15 @@ def compile_handler(spec: FunctionSpec, node_id: int,
     """
     codec = VectorCodec(spec.codec_width)
     op_log: List[Tuple[str, int]] = []
+    hash_log: List[int] = []
 
     def pure(store: Store, clock: jnp.ndarray, x):
         kv = KV(store, clock, node_id, codec)
         y = spec.handler(kv, x)
         op_log.clear()
         op_log.extend(kv.ops)
+        hash_log.clear()
+        hash_log.extend(kv.key_hashes)
         new_store, new_clock = kv.state
         return new_store, new_clock, y
 
@@ -208,6 +219,7 @@ def compile_handler(spec: FunctionSpec, node_id: int,
         return jitted(store, clock, x) + (list(op_log),)
 
     step.op_log = op_log
+    step.key_hashes = tuple(dict.fromkeys(hash_log))
     step.read_only = handler_read_only(op_log)
     return step
 
@@ -250,16 +262,19 @@ def compile_batched_handler(spec: FunctionSpec, node_id: int,
     """
     codec = VectorCodec(spec.codec_width)
     op_log: List[Tuple[str, int]] = []
+    hash_log: List[int] = []
 
     def pure(store: Store, clock: jnp.ndarray, x):
         kv = KV(store, clock, node_id, codec)
         y = spec.handler(kv, x)
         op_log.clear()
         op_log.extend(kv.ops)
+        hash_log.clear()
+        hash_log.extend(kv.key_hashes)
         new_store, new_clock = kv.state
         return new_store, new_clock, y
 
-    # trace once at deploy time: populates the static op log
+    # trace once at deploy time: populates the static op + key-hash logs
     _ = jax.eval_shape(pure, *_example_state(spec, example_input, node_id))
     read_only = handler_read_only(op_log)
 
@@ -278,7 +293,14 @@ def compile_batched_handler(spec: FunctionSpec, node_id: int,
         # never materialises a batched arena
         return jax.vmap(lambda x: pure(store, clock, x)[2])(xs)
 
-    jit_scan = jax.jit(scanned)
+    # donate the arena through the fold on backends where donation is
+    # real: XLA reuses the input buffers for the output store, so warm
+    # folds stop allocating a fresh arena per dispatch.  The caller's
+    # reference (nd.stores[kg]) dies with the dispatch — every snapshot
+    # that outlives it must be a clone (see cluster._schedule_replication
+    # and docs/batched_engine.md "Device-resident store").  jit_map is
+    # NOT donated: it hands the caller's own store refs back.
+    jit_scan = jax.jit(scanned, donate_argnums=donate_store_argnums())
     jit_map = jax.jit(mapped)
 
     def bstep(store, clock, xs, valid, independent: bool = False):
@@ -291,7 +313,11 @@ def compile_batched_handler(spec: FunctionSpec, node_id: int,
         return out + (list(op_log),)
 
     bstep.op_log = op_log
+    bstep.key_hashes = tuple(dict.fromkeys(hash_log))
     bstep.read_only = read_only
+    bstep.example = example_input
+    bstep.jit_scan = jit_scan
+    bstep.jit_map = jit_map
     return bstep
 
 

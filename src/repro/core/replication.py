@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.keygroup import TensorKeygroup, merge_tensor_keygroups
-from repro.core.store import Store, merge_stores
+from repro.core.store import Store, merge_stores, merge_stores_aligned
 
 
 # ---------------------------------------------------------------------------
@@ -121,6 +121,18 @@ def make_pod_replicate_step(mesh, merge: Callable[[Any, Any], Any],
 
 def merge_arena(a: Store, b: Store) -> Store:
     return merge_stores(a, b)
+
+
+def merge_arena_aligned(a: Store, b: Store) -> Store:
+    """Slot-aligned arena merge for pod-axis replication.
+
+    When every replica carries the keygroup's canonical slot layout
+    (deploy-time ``store_assign_slots`` — the Cluster tracks this per
+    keygroup), pass THIS as the merge to ``make_pod_replicate_step``:
+    inside shard_map it lowers to the elementwise ``enoki_merge_rows``
+    Pallas kernel (O(S·V)) instead of ``merge_stores``'s O(S²) probe.
+    Unaligned or dynamic-key arenas must keep ``merge_arena``."""
+    return merge_stores_aligned(a, b)
 
 
 def merge_tensor(a: TensorKeygroup, b: TensorKeygroup) -> TensorKeygroup:

@@ -24,12 +24,15 @@ queues therefore never change under a concurrent reader.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+import functools
+from typing import Dict, NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.versioning import VERSION_DTYPE, pack_version
+from repro.kernels.enoki_merge.kernel import enoki_merge_rows
 
 
 class Store(NamedTuple):
@@ -78,8 +81,21 @@ def store_select(pred, a: Store, b: Store) -> Store:
 # Single-key ops
 # ---------------------------------------------------------------------------
 
-def _locate(store: Store, key_hash) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """(slot_index, found).  slot_index is the match or the first empty slot."""
+def _locate(store: Store, key_hash) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Canonical slot probe.  Returns ``(slot, found, ok)``:
+
+    * ``slot``  — the matching slot when ``found``, else the first empty
+      slot (the dynamic-key fallback assignment),
+    * ``found`` — whether ``key_hash`` already occupies a slot (live OR
+      tombstoned; occupancy, not liveness),
+    * ``ok``    — False only on arena overflow (no match and no empty
+      slot); callers drop the write.
+
+    Slot-alignment contract: when a keygroup's keys were pre-assigned at
+    deploy time (``store_assign_slots`` stamps each key into its
+    canonical slot as a version-0 tombstone), the argmax probe lands on
+    the same slot on every replica, which is the invariant the
+    elementwise merge path (``merge_stores_aligned``) relies on."""
     match = store.keys == key_hash
     found = match.any()
     empty = store.keys == 0
@@ -89,7 +105,14 @@ def _locate(store: Store, key_hash) -> Tuple[jnp.ndarray, jnp.ndarray]:
 
 
 def kv_get(store: Store, key_hash) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Returns (value_row, length, version, found).  Tombstones read as absent."""
+    """Returns (value_row, length, version, found).
+
+    Tombstone-read contract: ``_locate``'s ``found`` means the key
+    occupies a slot, but the ``found`` returned HERE is liveness — a
+    tombstoned key (length < 0, written by ``kv_delete`` or by the
+    deploy-time slot pre-assignment) reads as absent: zero value, zero
+    length, found=False.  Its version still reads through so causal
+    consumers can observe the delete."""
     slot, found, _ = _locate(store, key_hash)
     live = found & (store.lengths[slot] >= 0)
     value = jnp.where(live, store.values[slot], jnp.zeros_like(store.values[slot]))
@@ -239,11 +262,170 @@ def merge_stores(a: Store, b: Store) -> Store:
                  versions=versions, vv=vv)
 
 
-# the replication hot path: one fused dispatch per merge instead of ~40
-# eager op dispatches (the delivery profile is dominated by merges under
-# replicated workloads).  jit's cache is keyed by arena shape, so every
-# keygroup geometry compiles once and is shared by all nodes/threads.
+# one fused dispatch per merge instead of ~40 eager op dispatches (the
+# delivery profile is dominated by merges under replicated workloads).
+# jit's cache is keyed by arena shape, so every keygroup geometry
+# compiles once and is shared by all nodes/threads.  This is the
+# FALLBACK path — slot-aligned keygroups take merge_stores_aligned /
+# merge_snapshots_fused below.
 merge_stores_jit = jax.jit(merge_stores)
+
+
+# ---------------------------------------------------------------------------
+# Device-resident merge path: slot-aligned arenas + fused multi-way merge
+# ---------------------------------------------------------------------------
+
+def donation_enabled() -> bool:
+    """Whether jit buffer donation is real on this backend.
+
+    XLA honours ``donate_argnums`` on TPU/GPU and silently ignores it on
+    CPU, so the serving stack only pays for the defensive snapshot clones
+    donation requires (queued snapshots must never alias a donated live
+    arena — see cluster._schedule_replication) where donation actually
+    reuses buffers."""
+    return jax.default_backend() in ("tpu", "gpu")
+
+
+def donate_store_argnums() -> tuple:
+    """``donate_argnums`` for entry points whose argument 0 is the arena
+    being folded/merged into (see faas.compile_batched_handler and
+    merge_many_fn)."""
+    return (0,) if donation_enabled() else ()
+
+
+@jax.jit
+def arena_clone(store: Store) -> Store:
+    """Deep-copy an arena into fresh device buffers.
+
+    Snapshot hygiene for donation: anything pushed into a delivery queue
+    or shared across nodes must be a clone, never a live reference to an
+    arena a later fold/merge may donate."""
+    return jax.tree.map(jnp.copy, store)
+
+
+def _merge_rows_tile(slots: int) -> int:
+    # largest divisor of the arena size <= 256: enoki_merge_rows requires
+    # the tile to divide the row count exactly
+    for tile in range(min(256, slots), 0, -1):
+        if slots % tile == 0:
+            return tile
+    return 1
+
+
+def merge_stores_aligned(a: Store, b: Store) -> Store:
+    """Elementwise LWW merge for SLOT-ALIGNED replicas.
+
+    Precondition: ``a.keys == b.keys`` slot for slot (deploy-time key
+    pre-assignment, see ``store_assign_slots``).  Matching then costs
+    nothing — each slot is its own match — and the merge degenerates to
+    the per-row versioned select the ``enoki_merge_rows`` Pallas kernel
+    implements: O(S·V) instead of ``merge_stores``'s O(S²) probe.  Runs
+    the real kernel on TPU and interpret mode elsewhere.
+
+    Bit-compatible with ``merge_stores`` on aligned arenas: strictly
+    greater version takes ``b``'s row (ties keep ``a``), version vectors
+    max elementwise.  Keys follow the winning row so a dynamic key that
+    ``b`` wrote into a still-empty canonical slot inserts correctly; what
+    this path canNOT express is two replicas claiming the same empty slot
+    for DIFFERENT novel keys — impossible for deployed handlers (their
+    key sets are pre-assigned), which is why alignment is tracked per
+    keygroup and anything else takes the ``merge_stores`` fallback.
+    """
+    take_b = b.versions > a.versions
+    values, versions = enoki_merge_rows(
+        a.values, a.versions, b.values, b.versions,
+        rows_tile=_merge_rows_tile(a.slots),
+        interpret=jax.default_backend() != "tpu")
+    return Store(
+        keys=jnp.where(take_b, b.keys, a.keys),
+        values=values,
+        lengths=jnp.where(take_b, b.lengths, a.lengths),
+        versions=versions,
+        vv=jnp.maximum(a.vv, b.vv),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def merge_many_fn(aligned: bool):
+    """Jitted K-way merge: fold a tuple of snapshots into an accumulator
+    arena with ONE device dispatch (``lax.scan`` over the stacked
+    snapshots).  jit's cache keys on the pytree structure, so each
+    (aligned, K, geometry) combination traces once.  The accumulator is
+    donated on backends where donation is real."""
+    body = merge_stores_aligned if aligned else merge_stores
+
+    def many(acc: Store, snaps) -> Store:
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *snaps)
+        out, _ = jax.lax.scan(lambda s, snap: (body(s, snap), None),
+                              acc, stacked)
+        return out
+
+    return jax.jit(many, donate_argnums=donate_store_argnums())
+
+
+# K is padded up to a small bucket set so warm delivery never sees a new
+# pytree structure (a new K would retrace); beyond the largest bucket the
+# exact K runs — still one dispatch, just a fresh trace.
+SNAPSHOT_K_BUCKETS = (1, 2, 4, 8, 16, 32)
+
+
+def merge_snapshots_fused(acc: Store, snaps: Sequence[Store], *,
+                          aligned: bool) -> Store:
+    """Merge K queued snapshots into ``acc``, in order, as ONE dispatch.
+
+    Order-preserving: identical to folding ``merge_stores`` (or the
+    aligned variant) left to right, which is what the sequential
+    delivery loop used to do — so (arrival, seq) LWW semantics are
+    bit-identical.  K is padded to the next ``SNAPSHOT_K_BUCKETS`` entry
+    by repeating the LAST snapshot: LWW merge is idempotent (matched
+    rows need a strictly greater version to win, vv max is idempotent),
+    so the repeats are no-ops.
+    """
+    snaps = tuple(snaps)
+    if not snaps:
+        return acc
+    for k in SNAPSHOT_K_BUCKETS:
+        if k >= len(snaps):
+            snaps = snaps + (snaps[-1],) * (k - len(snaps))
+            break
+    return merge_many_fn(bool(aligned))(acc, snaps)
+
+
+def store_assign_slots(store: Store, assignments: Dict[int, int]
+                       ) -> Tuple[Store, bool]:
+    """Stamp a deploy-time key→slot layout into an arena (host-side).
+
+    Each key hash is written into its canonical slot as a version-0
+    tombstone (length -1, zero payload): reads still see it as absent,
+    ``merge_stores`` treats it exactly like any occupied slot, and
+    ``_locate``'s argmax probe now lands on the same slot on every
+    replica that received the same layout — which is what makes the
+    elementwise ``merge_stores_aligned`` path valid.
+
+    Returns ``(store', ok)``.  ``ok`` is False when the layout cannot be
+    applied — a slot already holds a DIFFERENT key, or the hash already
+    lives in some other slot (dynamic writes beat the assignment): the
+    caller must mark the keygroup unaligned and keep the O(S²) fallback.
+    """
+    keys = np.array(jax.device_get(store.keys))
+    lengths = np.array(jax.device_get(store.lengths))
+    occupied = {int(k): i for i, k in enumerate(keys) if k != 0}
+    changed = False
+    for h, slot in assignments.items():
+        h = int(h)
+        cur = int(keys[slot])
+        if cur == h:
+            continue
+        if cur != 0 or h in occupied:
+            return store, False
+        keys[slot] = h
+        lengths[slot] = -1
+        occupied[h] = slot
+        changed = True
+    if not changed:
+        return store, True
+    return store._replace(keys=jnp.asarray(keys),
+                          lengths=jnp.asarray(lengths)), True
 
 
 def store_contents(store: Store) -> dict:

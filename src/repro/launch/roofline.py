@@ -545,3 +545,39 @@ def roofline_terms(analysis: Dict[str, Any], model_flops_global: float,
         "roofline_fraction": achievable / PEAK_FLOPS,
         "achievable_flops_per_chip": achievable,
     }
+
+
+# ---------------------------------------------------------------------------
+# Jitted-callable entry points (the serving-path roofline)
+# ---------------------------------------------------------------------------
+# This module deliberately avoids importing jax at module scope (the walker
+# is pure HLO-text analysis, usable on artifact dumps without a toolchain);
+# these helpers import it lazily so the batched scan-fold and the fused
+# delivery-merge programs of the serving stack can be costed from their
+# REAL jitted entry points (faas.compile_batched_handler's jit_scan,
+# store.merge_many_fn) — see benchmarks/roofline_table.py and
+# tests/test_roofline_walker.py.
+
+def abstractify(tree):
+    """Map a pytree of arrays to ShapeDtypeStructs (lower()-compatible)."""
+    import jax
+    return jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+
+
+def compiled_hlo_text(fn, *args, **kwargs) -> str:
+    """Post-optimization HLO of a jit-wrapped callable on (possibly
+    abstract) arguments — the text the walker costs."""
+    return fn.lower(*args, **kwargs).compile().as_text()
+
+
+def analyze_jit(fn, *args, pod_size: Optional[int] = None,
+                **kwargs) -> Dict[str, Any]:
+    """Lower + compile ``fn`` on ``args`` and cost its optimized HLO.
+
+    The one-call entry for costing serving programs: trip counts of
+    ``lax.scan``-derived while loops are static (the walker multiplies
+    the body cost out), so the batched fold at bucket B and the fused
+    merge at K snapshots report costs that scale with B and K."""
+    return analyze_hlo_text(compiled_hlo_text(fn, *args, **kwargs),
+                            pod_size=pod_size)

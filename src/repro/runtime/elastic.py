@@ -34,6 +34,7 @@ from repro.analysis import lockdep
 from repro.configs.base import MeshConfig, ReplicationPolicy
 from repro.core.engine import AtomicStats
 from repro.core.keygroup import arena_new
+from repro.core.store import arena_clone
 from repro.core.versioning import MAX_NODES
 
 # -- membership states ------------------------------------------------------
@@ -220,7 +221,10 @@ class ElasticMembership:
             if store is not None:
                 self.stats.inc("checkpoint_restores")
             else:
-                store = arena_new(kspec, MAX_NODES)
+                # blank_arena, not arena_new: the rebuilt replica must
+                # carry the keygroup's canonical slot layout to stay
+                # merge-aligned with its peers
+                store = c.blank_arena(kg, kspec)
                 self.stats.inc("fresh_restores")
             tnd = c.nodes[new_home]
             with tnd.lock:
@@ -245,7 +249,10 @@ class ElasticMembership:
                     continue
                 src = c.nodes[live[0]]
                 with src.lock:
-                    snapshot = src.stores[kg]
+                    # clone, never share: replicas with aliased arenas
+                    # break under buffer donation (TPU/GPU folds
+                    # invalidate the donated input)
+                    snapshot = arena_clone(src.stores[kg])
                 cnd = c.nodes[cand]
                 with cnd.lock:
                     cnd.stores[kg] = snapshot
@@ -288,10 +295,10 @@ class ElasticMembership:
                     c._deliver_until(src, t)
                     snd = c.nodes[src]
                     with snd.lock:
-                        snapshot = snd.stores[kg]
+                        snapshot = arena_clone(snd.stores[kg])
                 else:
                     snapshot = (self._restore_from_checkpoint(node, kg)
-                                or arena_new(kspec, MAX_NODES))
+                                or c.blank_arena(kg, kspec))
                 with nd.lock:
                     nd.stores[kg] = snapshot
                 c.naming.add_replica(kg, node)
@@ -331,7 +338,7 @@ class ElasticMembership:
                 target = targets[0]
                 tnd = c.nodes[target]
                 with nd.lock:
-                    snapshot = nd.stores[kg]
+                    snapshot = arena_clone(nd.stores[kg])
                 with tnd.lock:
                     tnd.stores[kg] = snapshot
                 c.naming.add_replica(kg, target)

@@ -13,6 +13,7 @@ from typing import Dict, List, Optional
 
 from repro.core.cluster import Cluster
 from repro.core.network import Link
+from repro.core.store import arena_clone
 
 
 @dataclasses.dataclass
@@ -56,8 +57,12 @@ class FailureInjector:
         peers = [p for p in peers if p != node and p in alive]
         if not peers:
             return False
-        self.cluster.nodes[node].stores[kg] = \
-            self.cluster.nodes[peers[0]].stores[kg]
+        src = self.cluster.nodes[peers[0]]
+        with src.lock:
+            # clone, never alias: a shared arena breaks under buffer
+            # donation (the peer's next fold would invalidate our copy)
+            snapshot = arena_clone(src.stores[kg])
+        self.cluster.nodes[node].stores[kg] = snapshot
         self.cluster.naming.add_replica(kg, node)
         return True
 

@@ -189,3 +189,38 @@ def test_enoki_merge_commutative_idempotent():
     aa = enoki_merge_rows(ab[0], ab[1], ab[0], ab[1], rows_tile=64,
                           interpret=True)
     _allclose(aa[0], ab[0], 0, 0, "idempotent")
+
+
+@pytest.mark.parametrize("n,row_width", [(10, 4), (8, 4), (3, 4), (7, 7)])
+def test_merge_flat_keygroup_ragged_tail(n, row_width):
+    """Row-granularity contract: ceil(N/row_width) version entries, the
+    last owning the ragged tail — its version must be MERGED into the
+    returned versions (max of the compared pair), never dropped, and the
+    tail payload follows the strictly-greater version like full rows do."""
+    from repro.kernels.enoki_merge.ops import merge_flat_keygroup
+    rows = n // row_width
+    nver = rows + (1 if rows * row_width < n else 0)
+    ks = jax.random.split(jax.random.PRNGKey(11), 2)
+    a = jax.random.normal(ks[0], (n,))
+    b = jax.random.normal(ks[1], (n,))
+    aver = (jnp.arange(nver, dtype=jnp.int32) * 3 + 1) % 7      # mixed wins
+    bver = (jnp.arange(nver, dtype=jnp.int32) * 5 + 2) % 7
+    out, mver = merge_flat_keygroup(a, b_flat=b, a_ver=aver, b_ver=bver,
+                                    row_width=row_width, interpret=True)
+    assert out.shape == (n,) and mver.shape == (nver,)
+    _allclose(mver, jnp.maximum(aver, bver), 0, 0, "flat versions")
+    # per-row reference: row i (incl. the ragged tail row) follows b iff
+    # b's version is strictly greater
+    ref = np.asarray(a).copy()
+    bn = np.asarray(b)
+    for i in range(nver):
+        lo, hi = i * row_width, min((i + 1) * row_width, n)
+        if int(bver[i]) > int(aver[i]):
+            ref[lo:hi] = bn[lo:hi]
+    _allclose(out, jnp.asarray(ref), 0, 0, "flat payload")
+    if rows * row_width < n:
+        # the old tail-dropping call shape (rows version entries) must be
+        # rejected loudly, not silently mis-merged
+        with pytest.raises(AssertionError):
+            merge_flat_keygroup(a, aver[:rows], b, bver[:rows],
+                                row_width=row_width, interpret=True)

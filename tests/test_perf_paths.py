@@ -134,6 +134,53 @@ def test_batched_invoke_throughput_regression():
         f"samples {samples})")
 
 
+def test_zero_recompiles_warm_serving():
+    """Shape-pinning guarantee: after deploy-time ``engine.prewarm()`` and
+    one settling round, a warm replicated serving loop over EVERY batch
+    bucket — staging, padding masks, scan-folds, replication flush and the
+    fused K-way delivery merges — records ZERO XLA compile requests
+    (``jax.monitoring`` events via analysis.jitprof), and the persistent
+    staging-buffer set stays fixed."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.analysis.jitprof import CompileCounter
+    from repro.core import Cluster, enoki_function, get_function
+    from repro.core.engine import DEFAULT_BUCKETS
+    from repro.core.faas import registry
+
+    if "warm_acc" not in registry():
+        @enoki_function(name="warm_acc", keygroups=["warmkg"], codec_width=8)
+        def warm_acc(kv, x):
+            cur, _ = kv.get("acc")
+            kv.set("acc", cur + x)
+            return cur + x
+
+    c = Cluster({"edge": "edge", "edge2": "edge", "cloud": "cloud"},
+                measure_compute=False)
+    c.deploy(get_function("warm_acc"), ["edge", "edge2", "cloud"],
+             example_input=jnp.ones((8,), jnp.float32))
+    eng = c.engine
+    assert eng.prewarm() > 0
+
+    x = np.ones((8,), np.float32)
+
+    def round_all():
+        for node in c.nodes:
+            for b in DEFAULT_BUCKETS:
+                c.invoke_batch("warm_acc", node, [x] * b)
+        c.flush_replication(1e12)
+
+    round_all()                     # settling round: staging buffers land
+    n_bufs = len(eng._staging.bufs)
+    assert n_bufs == len(DEFAULT_BUCKETS)   # one per (bucket, input leaf)
+    with CompileCounter() as cc:
+        for _ in range(3):
+            round_all()
+    assert cc.events == 0, (
+        f"{cc.events} compile requests during warm serving rounds")
+    assert len(eng._staging.bufs) == n_bufs, "staging buffers not reused"
+
+
 @pytest.mark.slow
 def test_perf_paths_match_baselines(tmp_path):
     script = tmp_path / "perf_paths.py"

@@ -1,0 +1,160 @@
+"""Device-resident merge path: slot-aligned elementwise merge and the
+coalesced multi-way delivery merge must be BIT-IDENTICAL to the O(S^2)
+``merge_stores`` baseline on aligned arenas — versions, lengths, keys and
+version vectors included — and ``_deliver_until`` must fold K pending
+snapshots in ONE fused dispatch.
+
+Arenas are generated under the deploy contract ``store_assign_slots``
+establishes: every registered key occupies the same canonical slot on
+every replica (as a version-0 pre-assigned tombstone until written), so a
+slot is either empty everywhere or stamped with the same key everywhere.
+Per-replica slot states then vary freely: pre-assigned, live, or deleted
+(tombstone with a real version), with adversarially small version ranges
+so ties and both win directions occur.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.store import (arena_clone, merge_snapshots_fused,
+                              merge_stores, merge_stores_aligned,
+                              merge_stores_jit, store_assign_slots,
+                              store_new, stores_equal)
+
+jax.config.update("jax_platform_name", "cpu")
+
+S, V, N = 8, 4, 4
+SETTINGS = dict(max_examples=10, deadline=None)
+
+# one replica's state for a stamped slot: kind, version, value row, length
+_slot = st.tuples(st.sampled_from(["pre", "live", "dead"]),
+                  st.integers(1, 8),
+                  st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                           min_size=V, max_size=V),
+                  st.integers(0, V))
+
+
+def _arena_strategy(replicas):
+    """(layout, per-slot states for each replica, per-replica vv)."""
+    return st.tuples(
+        st.lists(st.sampled_from([0, 1]), min_size=S, max_size=S),
+        st.lists(st.tuples(*[_slot] * replicas), min_size=S, max_size=S),
+        st.lists(st.lists(st.integers(0, 50), min_size=N, max_size=N),
+                 min_size=replicas, max_size=replicas))
+
+
+def _build(layout, states, vvs):
+    """Materialise one aligned arena per replica from the drawn spec."""
+    out = []
+    for r, vv in enumerate(vvs):
+        keys = np.zeros(S, np.int32)
+        values = np.zeros((S, V), np.float32)
+        lengths = np.zeros(S, np.int32)
+        versions = np.zeros(S, np.int32)
+        for i in range(S):
+            if not layout[i]:
+                continue            # empty on EVERY replica (shared layout)
+            kind, ver, row, length = states[i][r]
+            keys[i] = 1000 + i      # canonical key for slot i
+            if kind == "pre":       # deploy-time pre-assignment
+                lengths[i] = -1
+            elif kind == "live":
+                versions[i] = ver
+                values[i] = row
+                lengths[i] = length
+            else:                   # deleted: tombstone with real version
+                versions[i] = ver
+                lengths[i] = -1
+        out.append(store_new(S, V, N)._replace(
+            keys=jnp.asarray(keys), values=jnp.asarray(values),
+            lengths=jnp.asarray(lengths), versions=jnp.asarray(versions),
+            vv=jnp.asarray(vv, jnp.int32)))
+    return out
+
+
+@pytest.mark.tier0
+@given(_arena_strategy(2))
+@settings(**SETTINGS)
+def test_aligned_merge_matches_fallback(spec):
+    """merge_stores_aligned == merge_stores, bitwise, on aligned arenas."""
+    a, b = _build(*spec)
+    assert stores_equal(merge_stores_aligned(a, b), merge_stores(a, b))
+
+
+@pytest.mark.tier0
+@given(_arena_strategy(6), st.integers(1, 5))
+@settings(**SETTINGS)
+def test_fused_multiway_matches_sequential(spec, k):
+    """One fused K-way dispatch == K sequential two-way merges, bitwise,
+    on BOTH the aligned and the fallback body (K is padded up to the next
+    snapshot bucket internally — padding must not change the result)."""
+    arenas = _build(*spec)
+    acc, snaps = arenas[0], tuple(arenas[1:1 + k])
+    expect = arena_clone(acc)
+    for s in snaps:
+        expect = merge_stores_jit(expect, s)
+    for aligned in (True, False):
+        got = merge_snapshots_fused(arena_clone(acc), snaps, aligned=aligned)
+        assert stores_equal(got, expect), (aligned, k)
+
+
+@pytest.mark.tier0
+def test_store_assign_slots_contract():
+    """Layout stamping: idempotent on a matching arena, refused on a
+    conflicting one (the signal that flips a keygroup to the fallback)."""
+    arena = store_new(S, V, N)
+    layout = {1000: 0, 1001: 1}
+    stamped, ok = store_assign_slots(arena, layout)
+    assert ok and int(stamped.keys[0]) == 1000 and int(stamped.lengths[1]) == -1
+    again, ok2 = store_assign_slots(stamped, layout)
+    assert ok2 and stores_equal(again, stamped)   # no-op fast path
+    _, ok3 = store_assign_slots(stamped, {1000: 1})    # hash lives elsewhere
+    assert not ok3
+    _, ok4 = store_assign_slots(stamped, {2000: 0})    # slot already taken
+    assert not ok4
+
+
+@pytest.mark.tier0
+def test_delivery_merge_single_dispatch():
+    """K>=4 pending snapshots at a replica fold in ONE fused dispatch on
+    the slot-aligned path, and the post-merge store is byte-identical
+    (version vectors included) to the sequential per-snapshot baseline."""
+    from repro.core import Cluster, enoki_function, get_function
+    from repro.core.faas import registry
+
+    if "aligned_acc" not in registry():
+        @enoki_function(name="aligned_acc", keygroups=["alignedkg"],
+                        codec_width=4)
+        def aligned_acc(kv, x):
+            cur, _ = kv.get("acc")
+            kv.set("acc", cur + jnp.atleast_1d(x)[:1])
+            return cur[:1] + jnp.atleast_1d(x)[:1]
+
+    c = Cluster({"edge": "edge", "edge2": "edge"}, measure_compute=False)
+    c.deploy(get_function("aligned_acc"), ["edge", "edge2"],
+             example_input=jnp.ones((1,), jnp.float32))
+    assert c._aligned.get("alignedkg") is True     # deploy pre-assigned keys
+
+    K = 5
+    for i in range(K):
+        c.invoke("aligned_acc", "edge", jnp.ones((1,), jnp.float32),
+                 t_send=i * 10.0)
+
+    # sequential baseline from the exact pending snapshots, on a clone
+    with c._queues["edge2"].lock:
+        pending = sorted(c._queues["edge2"].heap, key=lambda e: (e[0], e[1]))
+    assert len(pending) == K
+    baseline = arena_clone(c.nodes["edge2"].stores["alignedkg"])
+    for _, _, kg, snap in pending:
+        assert kg == "alignedkg"
+        baseline = merge_stores_jit(baseline, snap)
+
+    d0, s0 = c.stats.merge_dispatches, c.stats.merge_snapshots
+    a0 = c.stats.merge_aligned
+    c.flush_replication(1e12)
+    assert c.stats.merge_dispatches - d0 == 1, "K snapshots != one dispatch"
+    assert c.stats.merge_snapshots - s0 == K
+    assert c.stats.merge_aligned - a0 == 1
+    assert stores_equal(c.nodes["edge2"].stores["alignedkg"], baseline)

@@ -341,14 +341,16 @@ def test_deliver_until_applies_in_arrival_order(monkeypatch):
     q.heap = [e3, e1, e2]                    # scrambled raw order
 
     merged_arrivals = []
-    real_merge = cluster_mod.merge_stores_jit
+    real_fused = cluster_mod.merge_snapshots_fused
 
-    def spying_merge(a, b):
-        merged_arrivals.append(next(ev[0] for ev in (e1, e2, e3)
-                                    if ev[3] is b))
-        return real_merge(a, b)
+    def spying_fused(acc, snaps, *, aligned):
+        # delivery now folds ALL due snapshots in one fused dispatch;
+        # the order contract moves to the stacking order inside it
+        merged_arrivals.extend(next(ev[0] for ev in (e1, e2, e3)
+                                    if ev[3] is s) for s in snaps)
+        return real_fused(acc, snaps, aligned=aligned)
 
-    monkeypatch.setattr(cluster_mod, "merge_stores_jit", spying_merge)
+    monkeypatch.setattr(cluster_mod, "merge_snapshots_fused", spying_fused)
     c._deliver_until("edge2", float("inf"))
     assert merged_arrivals == [e1[0], e2[0], e3[0]]   # network order
     assert q.heap == []
