@@ -260,6 +260,116 @@ def run_churn_serving(epochs: int = 3, writes_per_epoch: int = 16,
 
 
 # ---------------------------------------------------------------------------
+# Partition mode: the seeded chaos harness end to end.
+#
+# ``run_partition`` drives ``chaos_schedule``/``run_chaos`` (runtime/
+# failure.py) over the replicated placement: per-round lossy links
+# (drop_p <= 0.2, duplication, jitter), one multi-round partition of the
+# victim, one crash+restore after the heal — then replays the identical
+# plan with the network faults disabled (the fault-free twin) and asserts
+# the pinned invariants: zero silent losses (engine accounting balances,
+# every unserved probe is a surfaced drop) and final stores byte-identical
+# to the twin, version vectors included.  The artifact also records the
+# transport counters (retries/drops/dups/epoch rejections) so a run shows
+# the faults were real, not vacuously survived.
+# ---------------------------------------------------------------------------
+
+_CHAOS_NODES = ("edge", "edge2", "cloud")
+
+
+def _ensure_partition_fns():
+    if "part_ctr" in registry():
+        return
+
+    @enoki_function(name="part_ctr", keygroups=["partkg"], codec_width=4)
+    def part_ctr(kv, x):
+        cur, _ = kv.get("ctr")
+        kv.set("ctr", cur + jnp.atleast_1d(x)[:1])
+        return cur[:1] + jnp.atleast_1d(x)[:1]
+
+    @enoki_function(name="part_probe", keygroups=["partprobekg"],
+                    codec_width=4)
+    def part_probe(kv, x):
+        return jnp.atleast_1d(x)[:1]
+
+
+def _chaos_run(seed: int, rounds: int, apply_faults: bool):
+    """One chaos run (faulty, or its fault-free twin when
+    ``apply_faults=False``) over the same seeded plan."""
+    from repro.core import Cluster
+    from repro.runtime import (ElasticMembership, FailureInjector,
+                               chaos_schedule, run_chaos)
+    c = Cluster({n: ("cloud" if n == "cloud" else "edge")
+                 for n in _CHAOS_NODES}, measure_compute=False,
+                fault_seed=seed)
+    c.deploy(get_function("part_ctr"), list(_CHAOS_NODES),
+             policy=ReplicationPolicy.REPLICATED)
+    c.deploy(get_function("part_probe"), ["edge2"],
+             policy=ReplicationPolicy.REPLICATED)
+    m = ElasticMembership(c)
+    inj = FailureInjector(c, membership=m)
+    plan = chaos_schedule(seed, rounds, _CHAOS_NODES, victim="edge2")
+
+    def write(node, r, t):
+        # sequential writers + inter-write drain: every write folds on all
+        # prior ones, so the final counter equals the total write count in
+        # the faulty run AND the twin (LWW registers, not CRDTs)
+        c.invoke("part_ctr", node, jnp.ones((1,)), t_send=t + 1.0)
+        c.drain_transport(t + 1.0)
+
+    served, lost = [], []
+
+    def probe(r, t):
+        ticket = c.engine.submit("part_probe", "edge2", jnp.ones((1,)),
+                                 t_send=t + 2.0)
+        out = c.engine.flush()
+        (served if ticket in out else lost).append(r)
+
+    run_chaos(c, m, inj, plan, write, probe=probe,
+              apply_faults=apply_faults)
+    return c, m, plan, served, lost
+
+
+def run_partition(seed: int = 7, rounds: int = 12):
+    """Seeded chaos vs fault-free twin; returns the JSON-ready summary."""
+    from repro.core.store import stores_equal
+    _ensure_fns()
+    _ensure_partition_fns()
+    c, m, plan, served, lost = _chaos_run(seed, rounds, apply_faults=True)
+    ct, _, _, served_t, lost_t = _chaos_run(seed, rounds,
+                                            apply_faults=False)
+
+    st = c.engine.stats
+    accounting_ok = st.submitted == st.requests_flushed + st.dropped_dead
+    converged = all(
+        stores_equal(c.store_of("partkg", _CHAOS_NODES[0]),
+                     c.store_of("partkg", n)) for n in _CHAOS_NODES[1:])
+    twin_ok = all(
+        stores_equal(c.store_of("partkg", n), ct.store_of("partkg", n))
+        for n in _CHAOS_NODES)
+    writes = sum(len(plan.writers_for(r)) for r in range(rounds))
+    final = float(np.asarray(c.store_of("partkg", "edge").values)[0][0])
+    return {
+        "seed": seed, "rounds": rounds, "victim": "edge2",
+        "writes": writes, "final_counter": final,
+        "probes_served": len(served), "probes_lost": len(lost),
+        "silently_lost": st.submitted - st.requests_flushed
+        - st.dropped_dead,
+        "accounting_balances": accounting_ok,
+        "repl_retries": c.stats.repl_retries,
+        "repl_dropped": c.stats.repl_dropped,
+        "repl_duped": c.stats.repl_duped,
+        "epoch_rejections": c.stats.epoch_rejections,
+        "suspects": m.stats.suspects,
+        "false_suspects": m.stats.false_suspects,
+        "crashes": m.stats.crashes, "restores": m.stats.restores,
+        "replicas_converged": converged,
+        "matches_fault_free_twin": twin_ok,
+        "twin_probe_parity": served == served_t and lost == lost_t,
+    }
+
+
+# ---------------------------------------------------------------------------
 # Merge-path mode: the device-resident delivery merge, old vs new.
 #
 # ``run_merge_path`` pits the retired per-snapshot path (K sequential
@@ -354,6 +464,26 @@ def main():
             json.dump(result, f, indent=1)
         print(f"wrote {out}")
         assert result["speedup"] >= 2.0, result
+        return [result]
+    if "--partition" in sys.argv:
+        import json
+        import os
+        result = run_partition()
+        print_table([result], "Fig 6 partition — seeded chaos vs twin")
+        out_dir = os.path.abspath(
+            os.path.join(os.path.dirname(__file__), "..", "artifacts"))
+        os.makedirs(out_dir, exist_ok=True)
+        out = os.path.join(out_dir, "fig6_partition.json")
+        with open(out, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {out}")
+        assert result["silently_lost"] == 0, result
+        assert result["accounting_balances"], result
+        assert result["final_counter"] == result["writes"], result
+        assert result["replicas_converged"], result
+        assert result["matches_fault_free_twin"], result
+        assert result["twin_probe_parity"], result
+        assert result["repl_retries"] > 0, result
         return [result]
     if "--churn" in sys.argv:
         rows, summary = run_churn()

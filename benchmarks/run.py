@@ -88,11 +88,18 @@ def main_serve(argv):
                   "p99_ms": round(pct[99], 2),
                   "hedges_fired": rstats.hedges_fired,
                   "hedge_wins": rstats.hedge_wins,
-                  "pumps": srv.stats.pumps, "wakeups": srv.stats.wakeups}
+                  "pumps": srv.stats.pumps, "wakeups": srv.stats.wakeups,
+                  "repl_retries": cluster.stats.repl_retries,
+                  "repl_dropped": cluster.stats.repl_dropped,
+                  "repl_duped": cluster.stats.repl_duped,
+                  "epoch_rejections": cluster.stats.epoch_rejections}
     print(f"serve [{args.mode}]: {result['requests']} requests in "
           f"{result['wall_s']}s ({result['wall_ops_per_s']} ops/s wall)")
     print(f"  latency (virtual ms): p50={result['p50_ms']} "
           f"p90={result['p90_ms']} p99={result['p99_ms']}")
+    print(f"  transport: retries={result['repl_retries']} "
+          f"dropped={result['repl_dropped']} duped={result['repl_duped']} "
+          f"epoch_rejections={result['epoch_rejections']}")
     if args.hedge_after_ms is not None:
         print(f"  hedges: fired={result['hedges_fired']} "
               f"wins={result['hedge_wins']}")

@@ -56,10 +56,19 @@ LOCKS: Dict[str, Tuple[str, str]] = {
     "cluster.node_lock": (
         "_Node.lock",
         "one node's store/clock rebinds (read-dispatch-write)"),
+    "cluster.outbox_lock": (
+        "Cluster._outbox_lock",
+        "per-link replication outboxes + fencing epochs (ack/retry)"),
+    "health.lock": (
+        "HealthMonitor._lock",
+        "heartbeat records and per-observer reachability views"),
     # ---- leaves ----------------------------------------------------------
     "cluster.delivery_lock": (
         "_DeliveryQueue.lock",
         "one node's pending replication deliveries"),
+    "network.fault_lock": (
+        "FaultPlane._lock",
+        "fault specs, named partitions, per-link send counters"),
     "cluster.repl_lock": (
         "Cluster._repl_lock",
         "replication_bytes accounting"),
@@ -88,6 +97,7 @@ LOCKS: Dict[str, Tuple[str, str]] = {
 LEAF_LOCKS: FrozenSet[str] = frozenset({
     "cluster.delivery_lock",
     "cluster.repl_lock",
+    "network.fault_lock",
     "engine.cycle_state_lock",
     "engine.pool_lock",
     "engine.trace_lock",
@@ -110,7 +120,14 @@ ORDER_EDGES: Tuple[Tuple[str, str, Optional[str]], ...] = (
     ("engine.cycle_lock", "router.lock", "on_ready"),
     ("engine.cycle_lock", "server.cond", "on_ready"),
     ("membership.lock", "cluster.node_lock", None),
+    # bump_fence / drop_pending_deliveries run inside membership
+    # transitions; the drain acks (outbox surgery) under the node lock
+    ("membership.lock", "cluster.outbox_lock", None),
+    ("cluster.node_lock", "cluster.outbox_lock", None),
     ("cluster.node_lock", "cluster.delivery_lock", None),
+    # the transport pump pushes arrivals into the target's delivery queue
+    # while walking the link's outbox
+    ("cluster.outbox_lock", "cluster.delivery_lock", None),
 )
 
 # --------------------------------------------------------------------------
@@ -140,6 +157,8 @@ THREADED_CLASSES: FrozenSet[str] = frozenset({
     "_DeliveryQueue",
     "ElasticMembership",
     "NamingService",
+    "FaultPlane",
+    "HealthMonitor",
 })
 
 #: Lock-attribute names that identify a lock unambiguously, module-wide.
@@ -150,6 +169,7 @@ LOCK_ATTRS: Dict[str, str] = {
     "_cond": "server.cond",
     "_repl_lock": "cluster.repl_lock",
     "_trace_lock": "engine.trace_lock",
+    "_outbox_lock": "cluster.outbox_lock",
 }
 
 #: ``self._lock`` resolves by ENCLOSING CLASS (many classes reuse the
@@ -163,6 +183,8 @@ CLASS_LOCK_ATTRS: Dict[str, str] = {
     "ElasticMembership": "membership.lock",
     "_NodePool": "engine.pool_lock",
     "CheckpointManager": "checkpoint.lock",
+    "FaultPlane": "network.fault_lock",
+    "HealthMonitor": "health.lock",
 }
 
 #: Calls that reach a device dispatch / the JAX runtime — forbidden

@@ -5,12 +5,21 @@ and layers the paper's emulated network (network.py) on top as virtual time —
 the same methodology as the paper's tc-netem testbed, with the network
 emulated analytically instead of in the kernel.
 
-Replication is asynchronous, exactly as in FReD: a local write to a
-REPLICATED keygroup schedules a delivery event at every peer replica at
-``t_apply + one_way_delay``; peers fold the update in (LWW/CRDT merge) before
-serving any access with a later timestamp.  Staleness falls out of the event
-timeline and is measured by the benchmarks the same way the paper measures it
-(read time minus the apply time of the overwriting operation).
+Replication is asynchronous, exactly as in FReD — but the wire is the
+paper's WAN, not a reliable bus.  A local write to a REPLICATED keygroup
+appends an outbox entry per (source, target) link carrying ``(kg, seq,
+epoch, snapshot)``; transmission attempts consult the ``FaultPlane``
+(drops, duplication, jitter, partitions) and re-offer with capped
+exponential backoff until the entry is ACKED by the target's drain.
+Delivery is at-least-once on the wire and exactly-once at the store: the
+drain dedups by ``seq`` and rejects entries whose fencing ``epoch`` is
+stale (a crash/rebalance bumps the keygroup epoch, so a restored node's
+pre-crash snapshots cannot resurrect overwritten state).  Arrival times
+are stamped at TRANSMIT time from the current link, so snapshots queued
+during a partition deliver after ``heal()`` instead of stranding at inf.
+Staleness falls out of the event timeline and is measured by the
+benchmarks the same way the paper measures it (read time minus the apply
+time of the overwriting operation).
 
 Placements (ReplicationPolicy):
   REPLICATED     kv ops hit the node-local replica; async replication to peers
@@ -45,7 +54,7 @@ from repro.core.faas import (FunctionSpec, VectorCodec,
                              compile_batched_handler, compile_handler)
 from repro.core.keygroup import KeygroupSpec, arena_new
 from repro.core.naming import NamingService
-from repro.core.network import NetworkModel, paper_topology
+from repro.core.network import FaultPlane, NetworkModel, paper_topology
 from repro.core.store import (Store, arena_clone, donation_enabled,
                               merge_snapshots_fused, store_assign_slots)
 from repro.core.versioning import MAX_NODES
@@ -73,13 +82,52 @@ class InvokeResult:
 
 @dataclasses.dataclass
 class ClusterStats(AtomicStats):
-    """Delivery-merge accounting — the dispatch-count probe the fused-merge
-    tests and the verify smoke assert against.  Mutate via ``inc`` only
+    """Delivery-merge and transport accounting — the dispatch-count probe
+    the fused-merge tests and the verify smoke assert against, plus the
+    ack/retry transport's fault counters.  Mutate via ``inc`` only
     (``stats.lock`` is a leaf in the lock order, safe under node locks)."""
     merge_dispatches: int = 0   # fused delivery merges (ONE device dispatch each)
     merge_snapshots: int = 0    # queued snapshots folded by those dispatches
     merge_aligned: int = 0      # dispatches that took the slot-aligned kernel
     merge_fallback: int = 0     # dispatches on the O(S^2) merge_stores body
+    repl_retries: int = 0       # outbox re-offers (backoff after drop/partition)
+    repl_dropped: int = 0       # transmissions the fault plane dropped
+    repl_duped: int = 0         # duplicate deliveries suppressed at the drain
+    epoch_rejections: int = 0   # stale-fencing-epoch deliveries rejected
+
+
+# -- transport knobs: capped exponential backoff of the replication outbox
+REPL_RETRY_BASE_MS = 5.0
+REPL_RETRY_CAP_MS = 160.0
+# per entry per pump: bounds the retry loop under adversarial drop_p ~ 1.0
+# (p <= 0.2 converges in a couple of attempts; 64 straight drops at p=0.2
+# has probability ~1e-45)
+_MAX_ATTEMPTS_PER_PUMP = 64
+
+
+@dataclasses.dataclass
+class _OutboxEntry:
+    """One unacked replication snapshot on a (source, target) link.
+
+    State machine: PENDING (``sent=False``) — transmission attempts sample
+    the fault plane; a drop or partition re-offers at ``t_ready + backoff``
+    — then SENT once a transmission succeeds (the copy, or copies, are in
+    the target's delivery queue with finite arrivals), and the entry is
+    removed when the target's drain ACKS ``seq``.  A target crash clears
+    both its queue and the entries addressed to it; a SOURCE crash leaves
+    its own outgoing entries intact (the at-least-once sender restarts
+    with its outbox) — the fencing epoch rejects them if state moved on."""
+    kg: str
+    seq: int
+    epoch: int
+    snapshot: Store
+    nbytes: int
+    t_ready: float              # next transmission attempt (virtual ms)
+    t_base: float = 0.0         # original schedule instant: heal() re-arms
+                                # parked entries back to it so they deliver
+                                # as if freshly scheduled on the healed link
+    attempts: int = 0
+    sent: bool = False
 
 
 @dataclasses.dataclass
@@ -109,10 +157,14 @@ class _Node:
 @dataclasses.dataclass
 class _DeliveryQueue:
     """One node's pending replication deliveries: a heap of
-    ``(arrival_t, seq, kg, snapshot)`` behind its own lock, so peers
-    schedule into it and the target drains it without any global state."""
-    heap: List[Tuple[float, int, str, Store]] = dataclasses.field(
+    ``(arrival_t, seq, kg, snapshot, source, epoch)`` behind its own lock,
+    so link pumps push into it and the target drains it without any global
+    state.  ``applied`` is the dedup ledger of every seq this node ever
+    folded (or rejected) — touched only by ``_deliver_until`` under the
+    node lock, which serializes drains of one node."""
+    heap: List[Tuple[float, int, str, Store, str, int]] = dataclasses.field(
         default_factory=list)
+    applied: set = dataclasses.field(default_factory=set)
     lock: threading.Lock = dataclasses.field(
         default_factory=lambda: lockdep.make_lock("cluster.delivery_lock"),
         repr=False, compare=False)
@@ -120,8 +172,12 @@ class _DeliveryQueue:
 
 class Cluster:
     def __init__(self, nodes: Dict[str, str], net: Optional[NetworkModel] = None,
-                 measure_compute: bool = True):
+                 measure_compute: bool = True, fault_seed: int = 0):
         self.net = net or paper_topology()
+        # the lossy-WAN layer: replication transmissions and heartbeat
+        # reachability sample it (seeded => any fault schedule replays)
+        self.faults = FaultPlane(self.net, seed=fault_seed)
+        self.faults.on_heal = self._rearm_outboxes
         self.naming = NamingService()
         self.nodes: Dict[str, _Node] = {}
         for i, (name, kind) in enumerate(nodes.items()):
@@ -131,6 +187,19 @@ class Cluster:
         self._queues: Dict[str, _DeliveryQueue] = {
             name: _DeliveryQueue() for name in self.nodes}
         self._seq = itertools.count()
+        # per-(source, target) replication outboxes: unacked entries with
+        # their retry state.  One lock for the whole table — entries are
+        # tiny and the pump holds it only across host-side bookkeeping.
+        self._outboxes: Dict[Tuple[str, str], List[_OutboxEntry]] = {}
+        self._outbox_lock = lockdep.make_lock("cluster.outbox_lock")
+        # per-keygroup fencing epochs (bumped by membership crash/rebalance
+        # under membership.lock -> outbox_lock; read lock-free on the
+        # schedule/drain paths — a torn read is impossible for a dict of
+        # ints and staleness only delays a rejection by one drain)
+        self._epochs: Dict[str, int] = {}
+        # back-reference set by ElasticMembership.__init__ so the drain can
+        # report epoch rejections into MembershipStats
+        self.membership = None
         self._repl_lock = lockdep.make_lock(
             "cluster.repl_lock")             # replication_bytes accounting
         self._measure = measure_compute
@@ -295,11 +364,119 @@ class Cluster:
         return float(np.median(ts))
 
     # --------------------------------------------------------------- timeline
+    # -- fencing epochs ------------------------------------------------------
+    def fence_epoch(self, kg: str) -> int:
+        """Current fencing epoch of ``kg`` (0 until the first crash or
+        rebalance touches it).  Snapshots are stamped with it at schedule
+        time; the drain rejects anything older."""
+        return self._epochs.get(kg, 0)
+
+    def bump_fence(self, kg: str) -> int:
+        """Advance ``kg``'s fencing epoch (membership calls this on every
+        crash/rebalance involving the keygroup).  Outstanding snapshots
+        stamped with the old epoch are rejected at delivery — a restored
+        node cannot resurrect pre-crash state past the rebalance; it
+        re-syncs through the catch-up path instead."""
+        with self._outbox_lock:
+            e = self._epochs.get(kg, 0) + 1
+            self._epochs[kg] = e
+            return e
+
+    # -- the ack/retry transport --------------------------------------------
+    @staticmethod
+    def _backoff_ms(attempts: int) -> float:
+        return min(REPL_RETRY_BASE_MS * (2.0 ** attempts), REPL_RETRY_CAP_MS)
+
+    def _pump_entries(self, src: str, dst: str,
+                      entries: List[_OutboxEntry], t: float) -> None:
+        """Attempt transmission of every PENDING entry of one link whose
+        retry timer is due (``t_ready <= t``).  Called with the outbox lock
+        held; pushes successful copies into ``dst``'s delivery queue with
+        arrival stamped from the CURRENT link state (transmit time + one
+        way + sampled jitter) — partition-era entries re-time after heal.
+
+        A partitioned link costs ONE re-offer per pump (its state cannot
+        change within the call — heal() happens between pumps); lossy
+        links retry inline up to the per-pump attempt budget."""
+        base_t = t if np.isfinite(t) else 0.0
+        for e in entries:
+            if e.sent:
+                continue
+            budget = _MAX_ATTEMPTS_PER_PUMP
+            while not e.sent and e.t_ready <= t and budget > 0:
+                budget -= 1
+                attempt_t = e.t_ready if np.isfinite(e.t_ready) else base_t
+                if self.faults.partitioned(src, dst):
+                    e.t_ready = base_t + self._backoff_ms(e.attempts)
+                    e.attempts += 1
+                    self.stats.inc("repl_retries")
+                    break
+                tx = self.faults.transmit(src, dst)
+                if not tx.ok:
+                    e.t_ready = attempt_t + self._backoff_ms(e.attempts)
+                    e.attempts += 1
+                    self.stats.inc("repl_dropped")
+                    self.stats.inc("repl_retries")
+                    continue
+                arrival0 = attempt_t + self.net.one_way_ms(src, dst)
+                q = self._queues[dst]
+                with q.lock:
+                    for j in range(tx.copies):
+                        heapq.heappush(
+                            q.heap, (arrival0 + tx.jitter_ms[j], e.seq,
+                                     e.kg, e.snapshot, src, e.epoch))
+                e.sent = True
+
+    def _rearm_outboxes(self) -> None:
+        """heal() hook: reset every PENDING entry on a now-reachable link
+        back to its original schedule instant (``t_base``, fresh backoff).
+        Without this a partition-era retry timer sits at "last pump time +
+        backoff", and a flush at that same virtual horizon could never
+        reach it — the snapshot would strand exactly like the historical
+        ``inf``-arrival events.  Re-armed entries deliver at
+        ``t_base + one_way`` as if freshly scheduled on the healed link."""
+        with self._outbox_lock:
+            for (src, dst), entries in self._outboxes.items():
+                if self.faults.partitioned(src, dst):
+                    continue
+                for e in entries:
+                    if not e.sent and e.t_ready > e.t_base:
+                        e.t_ready = e.t_base
+                        e.attempts = 0
+
+    def _pump_inbound(self, node: str, t: float) -> None:
+        """Drive the retry state machine of every link INTO ``node`` up to
+        virtual time ``t`` — the receive half of the transport, run by the
+        target's drain so no extra scheduler thread exists."""
+        with self._outbox_lock:
+            for (src, dst), entries in self._outboxes.items():
+                if dst == node and entries:
+                    self._pump_entries(src, dst, entries, t)
+
+    def _ack(self, node: str, acks: List[Tuple[str, int]]) -> None:
+        """Remove drained entries from their (source, ``node``) outboxes —
+        the delivery ack.  A rejected (stale-epoch) or deduped delivery
+        acks too: the sender must stop re-offering either way."""
+        by_src: Dict[str, set] = {}
+        for src, seq in acks:
+            by_src.setdefault(src, set()).add(seq)
+        with self._outbox_lock:
+            for src, seqs in by_src.items():
+                key = (src, node)
+                entries = self._outboxes.get(key)
+                if entries:
+                    self._outboxes[key] = [e for e in entries
+                                           if e.seq not in seqs]
+
     def _deliver_until(self, node: str, t: float) -> None:
-        """Apply all replication deliveries for ``node`` with arrival <= t,
-        in (arrival, seq) order — network delivery order, so a later snapshot
-        is always merged after an earlier one regardless of how the pending
-        heap happens to be laid out.
+        """Pump the transport for ``node``'s inbound links, then apply all
+        deliveries with arrival <= t in (arrival, seq) order — network
+        delivery order, so a later snapshot is always merged after an
+        earlier one regardless of how the pending heap happens to be laid
+        out.  Duplicate seqs (link-level duplication, or a retransmit
+        racing its own ack) are suppressed via the queue's ``applied``
+        ledger, and entries carrying a stale fencing epoch are rejected;
+        both still ACK so the sender stops re-offering.
 
         The K due snapshots of each keygroup fold with ONE fused device
         dispatch (``merge_snapshots_fused``: a ``lax.scan`` over the
@@ -309,9 +486,11 @@ class Cluster:
         body otherwise.  Either way the result is bit-identical to the
         old per-snapshot loop (the scan folds in the same order).
 
-        Thread-safe: only ``node``'s own lock and queue lock are taken, so
-        deliveries to different nodes run concurrently under the parallel
-        pump."""
+        Thread-safe: ``node``'s own lock and queue lock serialize the
+        drain (the outbox lock nests inside the node lock for the ack),
+        so deliveries to different nodes run concurrently under the
+        parallel pump."""
+        self._pump_inbound(node, t)
         nd = self.nodes[node]
         q = self._queues[node]
         with nd.lock:
@@ -325,7 +504,18 @@ class Cluster:
                 heapq.heapify(keep)
                 q.heap = keep
             per_kg: Dict[str, List[Store]] = {}
-            for arrival, _, kg, snapshot in sorted(due, key=lambda e: e[:2]):
+            acks: List[Tuple[str, int]] = []
+            dups = stale = 0
+            for arrival, seq, kg, snapshot, source, epoch in sorted(
+                    due, key=lambda e: e[:2]):
+                acks.append((source, seq))
+                if seq in q.applied:
+                    dups += 1
+                    continue
+                q.applied.add(seq)
+                if epoch < self._epochs.get(kg, 0):
+                    stale += 1      # fenced: state moved on past the sender
+                    continue
                 if kg not in nd.stores:
                     continue    # replica crashed away mid-flight: stale
                 per_kg.setdefault(kg, []).append(snapshot)
@@ -337,6 +527,14 @@ class Cluster:
                 self.stats.inc("merge_snapshots", len(snaps))
                 self.stats.inc("merge_aligned" if aligned
                                else "merge_fallback")
+            if dups:
+                self.stats.inc("repl_duped", dups)
+            if stale:
+                self.stats.inc("epoch_rejections", stale)
+                m = self.membership
+                if m is not None:
+                    m.stats.inc("epoch_rejections", stale)
+            self._ack(node, acks)
 
     def _schedule_replication(self, kg: str, source: str, t_apply: float) -> None:
         spec = self.policies[kg]
@@ -353,29 +551,74 @@ class Cluster:
                 snapshot = arena_clone(snapshot)
         nbytes = sum(int(np.prod(x.shape)) * x.dtype.itemsize
                      for x in snapshot[:4])
+        epoch = self._epochs.get(kg, 0)
         alive = set(self.naming.alive_nodes())
-        for peer in self.naming.replicas_of(kg):
-            if peer == source or peer not in alive:
-                continue    # a dead replica receives nothing; a restore
-                            # re-syncs it from a live peer snapshot instead
-            arrival = t_apply + self.net.one_way_ms(source, peer)
-            q = self._queues[peer]
-            with q.lock:
-                heapq.heappush(q.heap,
-                               (arrival, next(self._seq), kg, snapshot))
+        targets = [peer for peer in self.naming.replicas_of(kg)
+                   if peer != source and peer in alive]
+                    # a dead replica receives nothing; a restore re-syncs
+                    # it from a live peer snapshot instead.  SUSPECT peers
+                    # DO receive entries — their outboxes simply retry
+                    # until the partition heals (replicas are not torn
+                    # down on suspicion).
+        t0 = t_apply if np.isfinite(t_apply) else 0.0
+        with self._outbox_lock:
+            for peer in targets:
+                entries = self._outboxes.setdefault((source, peer), [])
+                entries.append(_OutboxEntry(
+                    kg=kg, seq=next(self._seq), epoch=epoch,
+                    snapshot=snapshot, nbytes=nbytes, t_ready=t0,
+                    t_base=t0))
+                # eager first attempt at schedule time: on a healthy link
+                # this lands the old fire-and-forget arrival
+                # (t_apply + one_way) exactly
+                self._pump_entries(source, peer, entries, t0)
             with self._repl_lock:
-                self.replication_bytes += nbytes
+                self.replication_bytes += nbytes * len(targets)
 
     def drop_pending_deliveries(self, node: str) -> int:
         """Discard every undelivered replication event addressed to
-        ``node`` (a crashed replica loses what was still on the wire TO it;
-        events already scheduled at its peers are unaffected).  Returns the
-        number of dropped events."""
+        ``node``: its delivery queue AND the unacked outbox entries its
+        peers still hold for it (a crashed replica loses what was on the
+        wire TO it; the crashed node's own OUTGOING entries survive — the
+        at-least-once sender keeps its outbox across a restart, and the
+        fencing epoch rejects whatever went stale).  Returns the number of
+        dropped events (queued arrivals + never-transmitted entries; a
+        transmitted entry is already counted by its queued copy)."""
         q = self._queues[node]
         with q.lock:
             n = len(q.heap)
             q.heap = []
+        with self._outbox_lock:
+            for key in [k for k in self._outboxes if k[1] == node]:
+                n += sum(1 for e in self._outboxes.pop(key) if not e.sent)
         return n
+
+    def transport_idle(self) -> bool:
+        """True when nothing is in flight: every delivery queue is empty
+        and every outbox entry still unacked sits on a PARTITIONED link
+        (those cannot make progress until heal)."""
+        with self._outbox_lock:
+            for (src, dst), entries in self._outboxes.items():
+                if entries and not self.faults.partitioned(src, dst):
+                    return False
+        for q in self._queues.values():
+            with q.lock:
+                if q.heap:
+                    return False
+        return True
+
+    def drain_transport(self, t: float = 0.0, max_rounds: int = 200,
+                        step_ms: float = 1000.0) -> bool:
+        """Flush replication repeatedly, advancing virtual time from ``t``
+        by ``step_ms`` per round, until the transport is idle (retries on
+        lossy links need time to elapse for their backoff timers).  Returns
+        False when non-partitioned work remains after ``max_rounds`` —
+        never the case for drop_p < 1 links at the default budget."""
+        for i in range(max_rounds):
+            self.flush_replication(t + i * step_ms)
+            if self.transport_idle():
+                return True
+        return self.transport_idle()
 
     def add_node(self, name: str, kind: str = "edge") -> None:
         """Register a NEW node at runtime (elastic join).  The node starts
@@ -402,6 +645,14 @@ class Cluster:
                 continue
             with q.lock:
                 out.extend((ev[0], ev[2], name) for ev in q.heap)
+        # plus outbox entries not yet transmitted (partitioned or retrying
+        # links): surfaced with their next-attempt time as the horizon
+        with self._outbox_lock:
+            for (_, dst), entries in self._outboxes.items():
+                if node is not None and dst != node:
+                    continue
+                out.extend((e.t_ready, e.kg, dst)
+                           for e in entries if not e.sent)
         return sorted(out)
 
     # ----------------------------------------------------------------- invoke
@@ -510,10 +761,12 @@ class Cluster:
         raise KeyError(f"{fn_name} not deployed anywhere")
 
     def _nearest_deployment(self, fn_name: str, from_node: str) -> str:
-        """Nearest LIVE deployment — dead nodes never receive new work, so
-        a downstream wave whose usual target crashed fails over to the
-        nearest surviving replica instead of dispatching into the void."""
-        alive = set(self.naming.alive_nodes())
+        """Nearest ROUTABLE deployment — dead nodes never receive new
+        work, and SUSPECT nodes (minority-view partition) stop receiving
+        it too, so a downstream wave whose usual target crashed or went
+        unreachable fails over to the nearest surviving replica instead of
+        dispatching into the void."""
+        alive = set(self.naming.routable_nodes())
         nodes = [n for n in self.naming.deployments_of(fn_name)
                  if n in alive and fn_name in self.nodes[n].handlers]
         if not nodes:

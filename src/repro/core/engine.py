@@ -552,11 +552,12 @@ class BatchedInvocationEngine:
         return False
 
     def _evict_dead(self) -> Tuple[int, int]:
-        """Sweep queued windows targeting DEAD nodes (health-driven removal
-        or an injected crash) and convert each pending request into either a
-        rerouted window at the nearest surviving deployment or a fail-fast
-        drop when no live deployment remains.  Returns ``(rerouted,
-        dropped)``.
+        """Sweep queued windows targeting non-ROUTABLE nodes — DEAD
+        (health-driven removal or an injected crash) or SUSPECT (parked by
+        a minority-view partition; replicas intact but no new work) — and
+        convert each pending request into either a rerouted window at the
+        nearest surviving deployment or a fail-fast drop when no live
+        deployment remains.  Returns ``(rerouted, dropped)``.
 
         Called at the top of every ``pump``/``flush`` — before
         ``_validate`` — so a crashed node never hangs the serving thread:
@@ -572,7 +573,7 @@ class BatchedInvocationEngine:
         with self._qlock:
             dead = [w for w in self._windows
                     if w.key[1] in c.nodes
-                    and not c.naming.is_alive(w.key[1])]
+                    and not c.naming.is_routable(w.key[1])]
             if not dead:
                 return (0, 0)
             self._windows = [w for w in self._windows if w not in dead]
@@ -926,11 +927,12 @@ class BatchedInvocationEngine:
         c = self.cluster
         spec = c.specs[fn_name]
         n = len(xs)
-        if node in c.nodes and not c.naming.is_alive(node):
-            # the target died between collection and dispatch (a pool job
-            # racing an injected crash): convert to a rerouted frame at the
-            # nearest surviving deployment — nothing of this chunk has
-            # committed yet, so retrying elsewhere keeps at-most-once.  No
+        if node in c.nodes and not c.naming.is_routable(node):
+            # the target died (or went SUSPECT) between collection and
+            # dispatch (a pool job racing an injected crash): convert to a
+            # rerouted frame at the nearest surviving deployment — nothing
+            # of this chunk has committed yet, so retrying elsewhere keeps
+            # at-most-once.  No
             # survivor -> KeyError, and the group drops under the cycle's
             # normal failure path (tickets vanish; the server fails them
             # fast as RequestLost)

@@ -44,12 +44,14 @@ class NamingService:
     # -- node membership (heartbeats feed this; see runtime/health.py) -----
     def register_node(self, name: str, kind: str = "edge", **meta) -> None:
         with self._lock:
-            self._nodes[name] = {"kind": kind, "alive": True, **meta}
+            self._nodes[name] = {"kind": kind, "alive": True,
+                                 "suspect": False, **meta}
 
     def mark_dead(self, name: str) -> None:
         with self._lock:
             if name in self._nodes:
                 self._nodes[name]["alive"] = False
+                self._nodes[name]["suspect"] = False
 
     def mark_alive(self, name: str) -> None:
         """Re-admit a node (rejoin after crash/leave).  Callers must have
@@ -59,15 +61,48 @@ class NamingService:
         with self._lock:
             if name in self._nodes:
                 self._nodes[name]["alive"] = True
+                self._nodes[name]["suspect"] = False
+
+    def mark_suspect(self, name: str) -> None:
+        """Park a node SUSPECT (minority reachability view — see
+        runtime/elastic.py): it stays ALIVE (replicas intact, replication
+        keeps queueing to it) but drops out of the ROUTABLE set, so the
+        router and the engine's reroute paths stop picking it."""
+        with self._lock:
+            if name in self._nodes:
+                self._nodes[name]["suspect"] = True
+
+    def clear_suspect(self, name: str) -> None:
+        with self._lock:
+            if name in self._nodes:
+                self._nodes[name]["suspect"] = False
 
     def is_alive(self, name: str) -> bool:
         with self._lock:
             m = self._nodes.get(name)
             return bool(m and m["alive"])
 
+    def is_suspect(self, name: str) -> bool:
+        with self._lock:
+            m = self._nodes.get(name)
+            return bool(m and m.get("suspect"))
+
+    def is_routable(self, name: str) -> bool:
+        """Alive AND not suspect: eligible to receive NEW work.  Routing
+        reads this; replication/liveness bookkeeping keeps reading
+        ``is_alive`` (a suspect node's replicas are not torn down)."""
+        with self._lock:
+            m = self._nodes.get(name)
+            return bool(m and m["alive"] and not m.get("suspect"))
+
     def alive_nodes(self) -> List[str]:
         with self._lock:
             return [n for n, m in self._nodes.items() if m["alive"]]
+
+    def routable_nodes(self) -> List[str]:
+        with self._lock:
+            return [n for n, m in self._nodes.items()
+                    if m["alive"] and not m.get("suspect")]
 
     def node_kind(self, name: str) -> str:
         return self._nodes[name]["kind"]

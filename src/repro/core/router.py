@@ -155,7 +155,10 @@ class Router:
 
     # ------------------------------------------------------------------ picks
     def candidates(self, fn_name: str) -> List[str]:
-        alive = set(self.cluster.naming.alive_nodes())
+        # routable = alive and not SUSPECT: a node parked suspect by the
+        # membership (minority-view partition) keeps its replicas but
+        # stops being picked until its reachability clears
+        alive = set(self.cluster.naming.routable_nodes())
         nodes = [n for n in self.cluster.naming.deployments_of(fn_name)
                  if n in alive]
         return sorted(nodes,

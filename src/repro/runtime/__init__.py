@@ -1,8 +1,11 @@
 from repro.runtime.elastic import (ElasticMembership, MembershipStats,
                                    degraded_mesh_config, remesh)
-from repro.runtime.failure import FailureInjector
+from repro.runtime.failure import (ChaosEvent, ChaosPlan, FailureInjector,
+                                   chaos_schedule, run_chaos)
 from repro.runtime.health import HealthMonitor
 from repro.runtime.straggler import StragglerPolicy
 
 __all__ = ["ElasticMembership", "MembershipStats", "degraded_mesh_config",
-           "remesh", "FailureInjector", "HealthMonitor", "StragglerPolicy"]
+           "remesh", "ChaosEvent", "ChaosPlan", "FailureInjector",
+           "chaos_schedule", "run_chaos", "HealthMonitor",
+           "StragglerPolicy"]

@@ -39,7 +39,9 @@ from repro.core.versioning import MAX_NODES
 
 # -- membership states ------------------------------------------------------
 ALIVE = "alive"
-DEAD = "dead"       # crashed or health-timed-out; restorable
+SUSPECT = "suspect"  # silent to a MINORITY of observers (partition, not
+                     # crash): no rebalance, replicas intact, not routable
+DEAD = "dead"       # crashed or quorum-confirmed silent; restorable
 LEFT = "left"       # graceful departure; data handed off first
 
 
@@ -55,6 +57,9 @@ class MembershipStats(AtomicStats):
     fresh_restores: int = 0         # ...or lost entirely (fresh arena)
     caught_up: int = 0              # keygroups caught up on rejoin
     dropped_deliveries: int = 0     # replication events lost with a crash
+    suspects: int = 0               # ALIVE -> SUSPECT transitions
+    false_suspects: int = 0         # SUSPECT -> ALIVE (reachability returned)
+    epoch_rejections: int = 0       # stale-fencing-epoch deliveries rejected
 
 
 class ElasticMembership:
@@ -96,6 +101,8 @@ class ElasticMembership:
         # outermost lock of a membership transition; cluster node/queue
         # locks nest inside it, and nothing here is called under them
         self._lock = lockdep.make_rlock("membership.lock")
+        # back-reference: the drain reports stale-epoch rejections here
+        cluster.membership = self
 
     # ------------------------------------------------------------ checkpoints
     def _ckpt(self, node: str):
@@ -158,14 +165,16 @@ class ElasticMembership:
 
     def _down(self, node: str) -> Optional[Dict[str, str]]:
         """The shared take-a-node-dark path of ``crash`` and ``leave``.
-        Returns the rehome map, or None when the node was not ALIVE."""
+        Returns the rehome map, or None when the node was not ALIVE (a
+        SUSPECT node quorum-confirmed dead crashes through here too)."""
         c = self.cluster
         with self._lock:
-            if self.state.get(node) != ALIVE:
+            if self.state.get(node) not in (ALIVE, SUSPECT):
                 return None
             self.state[node] = DEAD
             # 1. liveness off first: router candidates, engine eviction and
-            #    _nearest_deployment all read it
+            #    _nearest_deployment all read it (mark_dead also clears any
+            #    suspect flag)
             c.naming.mark_dead(node)
             nd = c.nodes[node]
             with nd.lock:
@@ -179,10 +188,14 @@ class ElasticMembership:
             # 2. what was on the wire TO the node dies with it
             self.stats.inc("dropped_deliveries",
                            c.drop_pending_deliveries(node))
-            # 3. rebalance its keygroups
+            # 3. rebalance its keygroups — each bumps its fencing epoch
+            #    FIRST, so any snapshot the dead node (or a peer) stamped
+            #    before this crash is rejected at delivery instead of
+            #    resurrecting pre-crash state past the rebalance
             self._hosted[node] = set(lost)
             rehomed: Dict[str, str] = {}
             for kg in sorted(lost):
+                c.bump_fence(kg)
                 c.naming.remove_replica(kg, node)
                 target = self._rebalance(node, kg)
                 if target is not None:
@@ -190,10 +203,12 @@ class ElasticMembership:
             return rehomed
 
     def _alive_targets(self, near: str) -> List[str]:
-        """Live nodes sorted nearest-first from ``near`` (cloud nodes break
-        RTT ties last, so edge keygroups prefer edge survivors)."""
+        """ROUTABLE nodes sorted nearest-first from ``near`` (cloud nodes
+        break RTT ties last, so edge keygroups prefer edge survivors).
+        Suspect nodes are excluded: re-homing state onto a node the
+        majority cannot reach would strand it."""
         c = self.cluster
-        alive = [n for n in c.naming.alive_nodes() if n in c.nodes]
+        alive = [n for n in c.naming.routable_nodes() if n in c.nodes]
         return sorted(alive, key=lambda n: (c.net.rtt_ms(near, n),
                                             c.nodes[n].kind == "cloud", n))
 
@@ -305,7 +320,15 @@ class ElasticMembership:
                 caught.append(kg)
                 self.stats.inc("caught_up")
             # liveness LAST: the node is fully caught up before the
-            # router's candidate filter can see it
+            # router's candidate filter can see it.  The health monitor
+            # forgets the node's pre-crash silence — the resurrection
+            # contract: only THIS path revives a node; a stray beat from a
+            # dead node never flips naming back by itself, and a restored
+            # node is not instantly re-condemned by stale views.
+            if self.monitor is not None:
+                resurrect = getattr(self.monitor, "resurrect", None)
+                if resurrect is not None:
+                    resurrect(node)
             c.naming.mark_alive(node)
             self.state[node] = ALIVE
             self.stats.inc("restores")
@@ -352,18 +375,68 @@ class ElasticMembership:
             self.stats.inc("leaves")
 
     # ------------------------------------------------------------ health plane
+    def suspect(self, node: str) -> bool:
+        """ALIVE -> SUSPECT: a minority of observers finds the node silent
+        (partition signature).  The node drops out of the routable set —
+        the router stops picking it and the engine reroutes its queued
+        windows — but NOTHING is torn down: replicas stay, replication
+        keeps queueing to its outboxes, no rebalance fires.  Clears by
+        ``unsuspect`` (reachability returns) or hardens into a crash when
+        a quorum confirms the silence."""
+        with self._lock:
+            if self.state.get(node) != ALIVE:
+                return False
+            self.state[node] = SUSPECT
+            self.cluster.naming.mark_suspect(node)
+            self.stats.inc("suspects")
+            return True
+
+    def unsuspect(self, node: str) -> bool:
+        """SUSPECT -> ALIVE: the partition healed (or the suspicion was
+        wrong) — the node becomes routable again with no catch-up needed,
+        because nothing was torn down and its outbox backlog delivers on
+        the healed links."""
+        with self._lock:
+            if self.state.get(node) != SUSPECT:
+                return False
+            self.state[node] = ALIVE
+            self.cluster.naming.clear_suspect(node)
+            self.stats.inc("false_suspects")
+            return True
+
     def poll(self, now: Optional[float] = None) -> List[str]:
-        """Crash every node the health monitor NEWLY reports dead (same
-        path as an injected kill).  A serving loop calls this each wakeup;
-        returns the nodes crashed this call."""
+        """Drive ALIVE/SUSPECT/DEAD off the health monitor's per-observer
+        verdicts: quorum-confirmed silence crashes the node (same path as
+        an injected kill — within ONE poll of the views timing out), a
+        minority view parks it SUSPECT, and a clean bill un-suspects it.
+        Monitors without per-observer views (anything exposing only
+        ``dead_nodes``) degrade to the historical crash-on-timeout.  A
+        serving loop calls this each wakeup; returns the nodes crashed
+        this call."""
         if self.monitor is None:
             return []
         crashed = []
-        for n in self.monitor.dead_nodes(now):
-            with self._lock:
-                if self.state.get(n) == ALIVE:
-                    self.crash(n)
-                    crashed.append(n)
+        verdict = getattr(self.monitor, "verdict", None)
+        if verdict is None:                     # legacy monitor shape
+            for n in self.monitor.dead_nodes(now):
+                with self._lock:
+                    if self.state.get(n) == ALIVE:
+                        self.crash(n)
+                        crashed.append(n)
+            return crashed
+        for n, st in list(self.state.items()):
+            if st not in (ALIVE, SUSPECT):
+                continue
+            v = verdict(n, now)
+            if v == DEAD:
+                with self._lock:
+                    if self.state.get(n) in (ALIVE, SUSPECT):
+                        self.crash(n)
+                        crashed.append(n)
+            elif v == SUSPECT and st == ALIVE:
+                self.suspect(n)
+            elif v == ALIVE and st == SUSPECT:
+                self.unsuspect(n)
         return crashed
 
     def alive(self) -> List[str]:

@@ -1,0 +1,462 @@
+"""Partition tolerance: the lossy-network fault plane, the ack/retry
+replication transport, suspicion-based membership with fencing epochs, and
+the seeded chaos harness (ISSUE 10).
+
+Contracts under test:
+
+* transport — a snapshot scheduled while a link is partitioned is NOT
+  stranded: the outbox re-offers it with capped exponential backoff and it
+  delivers after ``heal()`` with its arrival re-timed from the healed link
+  (the red case this PR landed first: the old fire-and-forget heap insert
+  stamped ``arrival_t = inf`` at schedule time and never delivered);
+* determinism — the fault plane's drop/dup/jitter schedule is a pure
+  function of (seed, link, send counter): same seed, same schedule;
+* idempotence — duplicate deliveries are deduped at the drain, and even
+  WITHOUT the dedup the versioned-LWW merge makes re-application a no-op
+  (property-tested);
+* suspicion — a minority reachability view parks a node SUSPECT (no
+  rebalance, router stops picking it, replicas intact) while a quorum of
+  live peers confirming silence crashes it within one poll; fencing epochs
+  reject a restored node's stale deliveries;
+* chaos — under a seeded schedule of drops/dups/partitions/crashes a
+  served workload loses nothing silently and converges byte-identically
+  (version vectors included) to a fault-free twin after heal + drain.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import ReplicationPolicy
+from repro.core import Cluster, Router, enoki_function, get_function
+from repro.core.cluster import (REPL_RETRY_BASE_MS, REPL_RETRY_CAP_MS,
+                                Cluster as _Cluster)
+from repro.core.network import FaultPlane, paper_topology
+from repro.core.store import arena_clone, merge_stores_jit, stores_equal
+from repro.runtime import (ElasticMembership, FailureInjector, HealthMonitor,
+                           chaos_schedule, run_chaos)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@enoki_function(name="ptctr", keygroups=["ptkg"], codec_width=4)
+def ptctr(kv, x):
+    cur, found = kv.get("count")
+    new = jnp.where(found, cur[0] + x[0], x[0])
+    kv.set("count", jnp.stack([new, 0.0, 0.0, 0.0]))
+    return jnp.stack([new])
+
+
+def make_cluster(**kw):
+    kw.setdefault("measure_compute", False)
+    return Cluster({"edge": "edge", "edge2": "edge", "cloud": "cloud"}, **kw)
+
+
+def deploy_replicated(c, nodes=("edge", "edge2")):
+    c.deploy(get_function("ptctr"), list(nodes),
+             policy=ReplicationPolicy.REPLICATED)
+
+
+# ---------------------------------------------------------------------------
+# the red case: partition-era snapshots must deliver after heal
+# ---------------------------------------------------------------------------
+
+def test_snapshot_scheduled_during_partition_delivers_after_heal():
+    """Regression (landed red first): a write REPLICATED while the link is
+    severed must reach the peer once the link heals — without any further
+    writes.  The old transport stamped ``arrival_t = t + one_way`` at
+    schedule time, so a partition-era snapshot carried ``inf`` and survived
+    ``heal()`` undelivered forever."""
+    c = make_cluster()
+    deploy_replicated(c)
+    inj = FailureInjector(c)
+
+    inj.partition("edge", "edge2")
+    c.invoke("ptctr", "edge", jnp.ones((1,)))
+    c.flush_replication(1e12)
+    assert not stores_equal(c.store_of("ptkg", "edge"),
+                            c.store_of("ptkg", "edge2")), \
+        "partitioned peer must not observe the write"
+
+    inj.heal("edge", "edge2")
+    # NO new write: the healed link must carry the backlog by itself
+    c.flush_replication(1e12)
+    assert stores_equal(c.store_of("ptkg", "edge"),
+                        c.store_of("ptkg", "edge2")), \
+        "partition-era snapshot stranded after heal"
+    assert c.stats.repl_retries >= 1, "the outbox must have re-offered"
+
+
+# ---------------------------------------------------------------------------
+# tier0: fault plane determinism
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier0
+def test_fault_plane_same_seed_same_schedule():
+    """Every drop/dup/jitter decision is a pure function of (seed, link,
+    send counter): two planes with the same seed produce the identical
+    transmission schedule, a different seed produces a different one."""
+    def schedule(seed, n=64):
+        p = FaultPlane(paper_topology(), seed=seed)
+        p.set_fault("edge1", "cloud", drop_p=0.3, dup_p=0.3, jitter_ms=2.0)
+        return [p.transmit("edge1", "cloud") for _ in range(n)]
+
+    assert schedule(7) == schedule(7), "same seed must replay exactly"
+    assert schedule(7) != schedule(8), "seeds must decorrelate schedules"
+
+
+@pytest.mark.tier0
+def test_fault_plane_partition_blocks_and_heals():
+    p = FaultPlane(paper_topology(), seed=0)
+    name = p.partition({"edge1"}, {"cloud", "edge2"})
+    assert p.partitioned("edge1", "cloud")
+    assert p.partitioned("cloud", "edge1"), "partitions are symmetric"
+    assert not p.partitioned("cloud", "edge2"), "same group stays connected"
+    assert not p.transmit("edge1", "cloud").ok
+    p.heal(name)
+    assert not p.partitioned("edge1", "cloud")
+    assert p.transmit("edge1", "cloud").ok
+
+
+# ---------------------------------------------------------------------------
+# tier0: outbox state machine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier0
+def test_outbox_backoff_is_capped():
+    assert _Cluster._backoff_ms(0) == REPL_RETRY_BASE_MS
+    assert _Cluster._backoff_ms(1) == 2 * REPL_RETRY_BASE_MS
+    assert _Cluster._backoff_ms(3) == 8 * REPL_RETRY_BASE_MS
+    for attempts in range(6, 64):
+        assert _Cluster._backoff_ms(attempts) == REPL_RETRY_CAP_MS, \
+            "backoff must cap, not grow without bound"
+
+
+def test_outbox_retries_then_ack_clears_entry():
+    """A lossy link (drop_p=1) keeps the entry PENDING with growing
+    backoff; once the fault clears, the retransmit delivers, the drain
+    acks, and the outbox entry is gone."""
+    c = make_cluster()
+    deploy_replicated(c)
+    inj = FailureInjector(c, membership=ElasticMembership(c))
+    inj.set_link_fault("edge", "edge2", drop_p=1.0)
+
+    c.invoke("ptctr", "edge", jnp.ones((1,)))
+    c.flush_replication(1e6)
+    with c._outbox_lock:
+        entries = list(c._outboxes.get(("edge", "edge2"), []))
+    assert len(entries) == 1 and not entries[0].sent, \
+        "a fully lossy link must leave the entry pending"
+    assert entries[0].attempts >= 1
+    assert c.stats.repl_dropped >= 1 and c.stats.repl_retries >= 1
+
+    inj.clear_link_fault("edge", "edge2")
+    c.drain_transport(1e6)
+    with c._outbox_lock:
+        assert not c._outboxes.get(("edge", "edge2")), \
+            "the delivery ack must clear the outbox entry"
+    assert stores_equal(c.store_of("ptkg", "edge"),
+                        c.store_of("ptkg", "edge2"))
+
+
+def test_duplicate_delivery_is_deduped():
+    """dup_p=1 delivers two copies of every snapshot; the drain's applied
+    ledger suppresses the second and the stores still converge."""
+    c = make_cluster()
+    deploy_replicated(c)
+    inj = FailureInjector(c, membership=ElasticMembership(c))
+    inj.set_link_fault("edge", "edge2", dup_p=1.0)
+
+    c.invoke("ptctr", "edge", jnp.ones((1,)))
+    c.flush_replication(1e12)
+    assert c.stats.repl_duped >= 1, "the duplicate copy must be counted"
+    assert stores_equal(c.store_of("ptkg", "edge"),
+                        c.store_of("ptkg", "edge2"))
+
+
+@pytest.mark.tier0
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                min_size=1, max_size=6))
+def test_lww_merge_is_idempotent_under_duplicates(xs):
+    """Even WITHOUT the dedup ledger, re-merging the same versioned-LWW
+    snapshot is a byte-level no-op (version vectors included) — the
+    property that makes at-least-once retransmission safe."""
+    c = Cluster({"edge": "edge", "edge2": "edge"}, measure_compute=False)
+    c.deploy(get_function("ptctr"), ["edge", "edge2"],
+             policy=ReplicationPolicy.REPLICATED)
+    for i, x in enumerate(xs):
+        c.invoke("ptctr", "edge", jnp.asarray([x], jnp.float32),
+                 t_send=float(i))
+    c.flush_replication(1e12)
+    src = c.store_of("ptkg", "edge")
+    once = merge_stores_jit(arena_clone(c.store_of("ptkg", "edge2")), src)
+    twice = merge_stores_jit(arena_clone(once), src)
+    assert stores_equal(once, twice), \
+        "re-applying a snapshot must be a byte-identical no-op"
+
+
+# ---------------------------------------------------------------------------
+# suspicion-based membership
+# ---------------------------------------------------------------------------
+
+def _beating_env(**kw):
+    """Cluster + monitor + membership with heartbeats from every node at
+    t=0 (virtual-seconds clock for the health plane)."""
+    c = make_cluster(**kw)
+    deploy_replicated(c)
+    hm = HealthMonitor(naming=c.naming, timeout_s=10.0, plane=c.faults)
+    m = ElasticMembership(c, monitor=hm)
+    inj = FailureInjector(c, membership=m)
+    for n in c.nodes:
+        hm.beat(n, step=0, t=0.0)
+    return c, hm, m, inj
+
+
+def test_minority_partition_parks_suspect_not_crash():
+    """edge<->edge2 severed, cloud still reaches both: each side of the
+    cut is silent to ONE observer — below quorum (2 of 2 here) — so both
+    park SUSPECT: no rebalance, replicas intact, router stops picking
+    them; the heal un-suspects with nothing torn down."""
+    c, hm, m, inj = _beating_env()
+    inj.partition("edge", "edge2")
+    for t in (5.0, 11.0):               # beats keep flowing post-cut
+        for n in c.nodes:
+            hm.beat(n, step=1, t=t)
+
+    # at now=15 only the views frozen by the cut (age 15s > 10s timeout)
+    # are stale; everything that still flows is 4s old
+    crashed = m.poll(now=15.0)
+    assert crashed == []
+    assert m.state["edge2"] == "suspect" and m.state["edge"] == "suspect"
+    assert m.stats.suspects >= 2
+    assert m.stats.rebalanced == 0, "a suspect must NOT trigger rebalance"
+    assert c.naming.replicas_of("ptkg") >= {"edge", "edge2"}, \
+        "suspect replicas must stay in the replica set"
+    assert not c.naming.is_routable("edge2")
+    assert Router(c).candidates("ptctr") == [], \
+        "router must not pick suspect nodes (both deployments suspect)"
+
+    inj.heal("edge", "edge2")
+    for n in c.nodes:
+        hm.beat(n, step=2, t=23.0)
+    assert m.poll(now=24.0) == []
+    assert m.state["edge"] == "alive" and m.state["edge2"] == "alive"
+    assert m.stats.false_suspects >= 2
+    assert c.naming.is_routable("edge2")
+
+
+def test_quorum_silence_crashes_within_one_poll():
+    """Full isolation of edge2: BOTH other observers find it silent —
+    quorum — so one poll takes it through the same crash path as an
+    injected kill (rebalance fires, replication stops targeting it)."""
+    c, hm, m, inj = _beating_env()
+    inj.partition_groups({"edge2"}, {"edge", "cloud"})
+    for t in (5.0, 11.0):
+        for n in c.nodes:
+            hm.beat(n, step=1, t=t)
+
+    crashed = m.poll(now=15.0)
+    assert crashed == ["edge2"]
+    assert m.state["edge2"] == "dead"
+    assert m.stats.crashes == 1
+    assert not c.naming.is_alive("edge2")
+
+
+def test_stale_epoch_delivery_rejected_after_restore():
+    """The victim writes during the partition (snapshot parked in ITS
+    outbox), is crashed by quorum, and its keygroup's fencing epoch bumps
+    with the rebalance.  After heal + restore the parked pre-crash
+    snapshot finally transmits — and must be REJECTED as stale instead of
+    resurrecting pre-crash state past the rebalance; the node converges
+    via the restore's catch-up instead."""
+    c = make_cluster()
+    deploy_replicated(c)
+    m = ElasticMembership(c)
+    inj = FailureInjector(c, membership=m)
+
+    c.invoke("ptctr", "edge", jnp.ones((1,)))           # shared history
+    c.flush_replication(1e12)
+
+    inj.partition("edge", "edge2")
+    c.invoke("ptctr", "edge2", jnp.ones((1,)), t_send=10.0)
+    c.flush_replication(1e12)           # parked: edge2 -> edge, epoch 0
+    with c._outbox_lock:
+        assert c._outboxes.get(("edge2", "edge")), \
+            "the partition-era write must be parked in edge2's outbox"
+
+    inj.kill_node("edge2")              # bumps ptkg's fence to 1; edge2's
+    assert c.fence_epoch("ptkg") >= 1   # own outgoing entries survive
+    inj.heal("edge", "edge2")
+    inj.restore_node("edge2", t=1e12)
+
+    c.drain_transport(1e12)             # the stale entry transmits now
+    assert m.stats.epoch_rejections >= 1, \
+        "pre-crash snapshot must be fenced off, not merged"
+    assert c.stats.epoch_rejections >= 1
+    assert stores_equal(c.store_of("ptkg", "edge"),
+                        c.store_of("ptkg", "edge2")), \
+        "the restored node converges via catch-up, not the stale delivery"
+    r = c.invoke("ptctr", "edge", jnp.ones((1,)), t_send=1e12)
+    assert float(np.asarray(r.output)[0]) == 2.0, \
+        "the fenced write stays lost (documented loss window), not replayed"
+
+
+def test_resurrection_contract():
+    """dead_nodes is PURE and a heartbeat from a declared-dead node must
+    NOT revive naming — only ElasticMembership.restore may; and a restored
+    node is not instantly re-crashed by its pre-crash silence."""
+    c, hm, m, inj = _beating_env()
+    m.crash("edge2")
+    assert not c.naming.is_alive("edge2")
+
+    for n in ("edge", "cloud"):         # survivors keep beating
+        hm.beat(n, step=5, t=100.0)
+    hm.beat("edge2", step=5, t=100.0)   # a zombie beat after the verdict
+    assert hm.dead_nodes(now=100.0) == []       # it IS beating...
+    assert not c.naming.is_alive("edge2"), \
+        "a stray beat must not revive a dead node's naming entry"
+    assert m.state["edge2"] == "dead"
+
+    m.restore("edge2", t=1e12)
+    assert c.naming.is_alive("edge2")
+    # pre-crash views were wiped: the next poll judges it on post-restore
+    # beats only, so it stays alive instead of being re-condemned
+    assert m.poll(now=100.0) == []
+    assert m.state["edge2"] == "alive"
+
+
+def test_reads_your_writes_under_drop_faults():
+    """A session pinned by the router never observes its counter regress,
+    even when every replication link drops and duplicates aggressively —
+    retries make the log converge between writes."""
+    c = make_cluster()
+    deploy_replicated(c)
+    inj = FailureInjector(c, membership=ElasticMembership(c))
+    for a, b in (("edge", "edge2"), ("edge", "cloud"), ("edge2", "cloud")):
+        inj.set_link_fault(a, b, drop_p=0.2, dup_p=0.2, jitter_ms=2.0)
+    router = Router(c)
+
+    last, t = 0.0, 0.0
+    for i in range(8):
+        t += 500.0
+        r = router.invoke("ptctr", jnp.ones((1,)), t_send=t,
+                          session_id="pt-session")
+        v = float(np.asarray(r.output)[0])
+        assert v > last, "reads-your-writes: counter must never regress"
+        last = v
+        c.drain_transport(t)
+    assert last == 8.0
+
+
+# ---------------------------------------------------------------------------
+# the seeded chaos harness
+# ---------------------------------------------------------------------------
+
+_CHAOS_NODES = ("edge", "edge2", "cloud")
+
+
+@enoki_function(name="ptprobe", keygroups=["ptprobekg"], codec_width=4)
+def ptprobe(kv, x):
+    cur, _ = kv.get("beacon")
+    return cur[:1] + x[:1]
+
+
+def _chaos_run(seed, rounds, apply_faults):
+    """One full chaos run (faulty or fault-free twin) over the same plan.
+    Returns (cluster, membership, plan, probe log)."""
+    c = Cluster({n: ("cloud" if n == "cloud" else "edge")
+                 for n in _CHAOS_NODES}, measure_compute=False,
+                fault_seed=seed)
+    c.deploy(get_function("ptctr"), list(_CHAOS_NODES),
+             policy=ReplicationPolicy.REPLICATED)
+    c.deploy(get_function("ptprobe"), ["edge2"],
+             policy=ReplicationPolicy.REPLICATED)
+    m = ElasticMembership(c)
+    inj = FailureInjector(c, membership=m)
+    plan = chaos_schedule(seed, rounds, _CHAOS_NODES, victim="edge2")
+
+    def write(node, r, t):
+        # sequential writers with an inter-write drain: every write folds
+        # on top of ALL prior writes, so each adds exactly +1 and the
+        # final counter equals the total write count — which is what lets
+        # the faulty run be compared byte-for-byte against the twin
+        # (counters are LWW registers, not CRDTs: concurrent writes from
+        # stale bases would race and lose increments run-dependently)
+        c.invoke("ptctr", node, jnp.ones((1,)), t_send=t + 1.0)
+        c.drain_transport(t + 1.0)
+
+    served, lost = [], []
+
+    def probe(r, t):
+        ticket = c.engine.submit("ptprobe", "edge2", jnp.ones((1,)),
+                                 t_send=t + 2.0)
+        out = c.engine.flush()
+        (served if ticket in out else lost).append(r)
+
+    run_chaos(c, m, inj, plan, write, probe=probe,
+              apply_faults=apply_faults)
+    return c, m, plan, served, lost
+
+
+def test_chaos_no_silent_loss_and_byte_identical_convergence():
+    """The headline invariant: under a seeded schedule of drops (p<=0.2),
+    duplication, one multi-round partition and one crash+restore, a
+    served workload (a) loses nothing silently — every engine submission
+    is either flushed or surfaced as dropped, (b) converges so every live
+    replica is byte-identical, and (c) the converged stores are
+    byte-identical (version vectors included) to a fault-free twin run of
+    the same plan."""
+    rounds = 12
+    c, m, plan, served, lost = _chaos_run(seed=7, rounds=rounds,
+                                          apply_faults=True)
+    ct, mt, _, served_t, lost_t = _chaos_run(seed=7, rounds=rounds,
+                                             apply_faults=False)
+
+    # (a) conservation: nothing vanishes from the engine's accounting,
+    # and every lost probe is surfaced (dropped_dead), never silent
+    st_ = c.engine.stats
+    assert st_.submitted == st_.requests_flushed + st_.dropped_dead, \
+        "engine accounting must balance: submitted == flushed + dropped"
+    assert len(lost) == st_.dropped_dead, \
+        "every unserved probe must be a surfaced drop"
+    assert len(served) + len(lost) == rounds
+    assert lost, "the crash window must actually drop some probes"
+
+    # the faults were real: retries/drops/dups all exercised
+    assert c.stats.repl_retries > 0
+    assert c.stats.repl_dropped > 0 or c.stats.repl_duped > 0
+
+    # (b) post-heal convergence across the faulty run's replicas, and no
+    # write lost: the counter equals the exact number of issued writes
+    for node in _CHAOS_NODES[1:]:
+        assert stores_equal(c.store_of("ptkg", _CHAOS_NODES[0]),
+                            c.store_of("ptkg", node)), \
+            f"faulty-run replicas diverge at {node}"
+    writes = sum(len(plan.writers_for(r)) for r in range(rounds))
+    final = float(np.asarray(c.store_of("ptkg", "edge").values)[0][0])
+    assert final == writes, \
+        f"every write must survive the faults: {final} != {writes}"
+
+    # (c) byte-identical to the fault-free twin, version vectors included
+    assert lost == lost_t and served == served_t, \
+        "the twin must drop exactly the same probes (crash parity)"
+    for node in _CHAOS_NODES:
+        assert stores_equal(c.store_of("ptkg", node),
+                            ct.store_of("ptkg", node)), \
+            f"faulty vs fault-free stores differ at {node}"
+
+
+@pytest.mark.tier0
+def test_chaos_schedule_is_deterministic():
+    a = chaos_schedule(3, 12, _CHAOS_NODES, victim="edge2")
+    b = chaos_schedule(3, 12, _CHAOS_NODES, victim="edge2")
+    assert a == b, "same seed must produce the identical plan"
+    assert a != chaos_schedule(4, 12, _CHAOS_NODES, victim="edge2")
+    # exactly one partition, one heal, one crash, one restore
+    kinds = [e.action for e in a.events]
+    for k in ("partition", "heal", "crash", "restore"):
+        assert kinds.count(k) == 1
+    assert a.quiet_rounds, "the victim must sit out the fault windows"

@@ -147,7 +147,7 @@ def test_delivery_merge_single_dispatch():
         pending = sorted(c._queues["edge2"].heap, key=lambda e: (e[0], e[1]))
     assert len(pending) == K
     baseline = arena_clone(c.nodes["edge2"].stores["alignedkg"])
-    for _, _, kg, snap in pending:
+    for _, _, kg, snap, _, _ in pending:
         assert kg == "alignedkg"
         baseline = merge_stores_jit(baseline, snap)
 
